@@ -1,0 +1,64 @@
+"""Beyond-paper: HAPM tile groups + the block-sparse Pallas kernel (the
+TPU DSB analogue). Reports skipped-tile fractions, the modeled compute/DMA
+saving, and kernel-vs-oracle correctness at several sparsity levels."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HAPMConfig, hapm_element_masks, hapm_epoch_update, hapm_init
+from repro.core.groups import tpu_tile_groups
+from repro.kernels import ops, ref
+from repro.sparse.block_mask import plan_from_tile_mask, tile_mask_from_weight
+
+
+def run(args=None) -> dict:
+    print("=" * 72)
+    print("TPU tile-HAPM + block-sparse kernel (DSB analogue)")
+    print("=" * 72)
+    rng = np.random.RandomState(0)
+    K, N, M = 1024, 1024, 256
+    block = (128, 128)
+    w = jnp.asarray(rng.randn(K, N).astype(np.float32) *
+                    rng.rand(K, N))  # heterogeneous magnitudes
+    spec = tpu_tile_groups((K, N), block)
+    specs = {"w": spec}
+    params = {"w": w}
+
+    out = {}
+    print(f"\nweight {K}x{N}, tiles {spec.tiles}, block {block}")
+    print(f"{'group sparsity':>15} {'tiles skipped':>14} {'grid-step frac':>15} "
+          f"{'max err vs oracle':>18}")
+    for target in (0.25, 0.5, 0.75):
+        cfg = HAPMConfig(target, 1)
+        st = hapm_init(specs, cfg)
+        st = hapm_epoch_update(st, specs, params, cfg)
+        masks = hapm_element_masks(specs, st)
+        wm = np.asarray(w * masks["w"])
+        tm = tile_mask_from_weight(wm, block)
+        plan = plan_from_tile_mask(tm, block)
+        f = ops.make_block_sparse_matmul(plan, tm)
+        x = jnp.asarray(rng.randn(M, K).astype(np.float32))
+        y = f(x, w)
+        y_ref = ref.block_sparse_matmul_ref(x, w, jnp.asarray(tm), block)
+        err = float(jnp.max(jnp.abs(y - y_ref)))
+        # grid steps executed vs dense: the cycle-model quantity (paper Eq.3
+        # analogue — skipped tiles cost neither MXU passes nor HBM->VMEM DMA)
+        frac = plan.cnt.sum() / (plan.tiles[0] * plan.tiles[1])
+        print(f"{target:>15.2f} {plan.skipped_tiles:>14} {frac:>15.3f} {err:>18.2e}")
+        out[target] = {"skipped": int(plan.skipped_tiles), "kept_frac": float(frac),
+                       "err": err}
+        assert err < 1e-3
+        assert abs(frac - (1 - target)) < 0.05
+
+    print("\nmodeled per-matmul compute & weight-DMA saving == kept-tile "
+          "fraction (grid iterates only live tiles; cf. FPGA DSB skipping "
+          "whole (f_block, g) schedule steps).")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Roofline table from the dry-run results cache (launch.dryrun writes
+``dryrun_results.json``). One row per (arch × shape × mesh) cell."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def run(args=None) -> dict:
+    path = getattr(args, "dryrun_json", None) if args else None
+    path = path or "dryrun_results.json"
+    print("=" * 72)
+    print(f"Roofline table (source: {path})")
+    print("=" * 72)
+    if not os.path.exists(path):
+        print("no dry-run results yet — run `python -m repro.launch.dryrun` first")
+        return {}
+    with open(path) as f:
+        results = json.load(f)
+
+    rows, errors, skips = [], [], []
+    for key, r in sorted(results.items()):
+        if r.get("status") == "skipped":
+            skips.append((r["arch"], r["shape"], r["mesh"]))
+            continue
+        if r.get("status") != "ok" or "roofline" not in r:
+            if r.get("status") == "error":
+                errors.append((key, r.get("error", "")[:80]))
+            continue
+        rl = r["roofline"]
+        rows.append((r["arch"], r["shape"], r["mesh"],
+                     rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"],
+                     rl["dominant"], r.get("useful_compute_ratio", float("nan")),
+                     r["memory"].get("peak_estimate_bytes", 0) / 2 ** 30,
+                     r.get("fits_hbm")))
+
+    print(f"\n{'arch':>22} {'shape':>12} {'mesh':>8} {'t_comp':>9} {'t_mem':>9} "
+          f"{'t_coll':>9} {'bound':>10} {'mdl/HLO':>8} {'GiB/dev':>8} {'fits':>5}")
+    for r in rows:
+        print(f"{r[0]:>22} {r[1]:>12} {r[2]:>8} {r[3]*1e3:>8.1f}m {r[4]*1e3:>8.1f}m "
+              f"{r[5]*1e3:>8.1f}m {r[6]:>10} {r[7]:>8.3f} {r[8]:>8.2f} {str(r[9]):>5}")
+    if skips:
+        print(f"\nskipped cells ({len(skips)}): " +
+              ", ".join(f"{a}×{s}@{m}" for a, s, m in skips[:12]) +
+              (" …" if len(skips) > 12 else ""))
+    for key, err in errors:
+        print(f"ERROR {key}: {err}")
+    print(f"\n{len(rows)} compiled cells, {len(skips)} documented skips, "
+          f"{len(errors)} errors")
+    return {"rows": len(rows), "errors": len(errors)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,145 @@
+"""Shared CNN training harness for the paper's four model variants
+(Table I): (1) fp32, (2) int8 QAT, (3) int8 + uniform pruning [Zhu-Gupta],
+(4) int8 + HAPM. Used by bench_training / bench_inference /
+examples/train_cifar_hapm.py.
+
+Epoch counts default far below the paper's 200/100/100/60 (CPU container);
+``--paper`` restores the full protocol. Relative orderings (the paper's
+claims) are reproduced at reduced scale on the synthetic set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.accel.config import AcceleratorConfig
+from repro.core import (HAPMConfig, UniformPruneConfig, apply_masks,
+                        hapm_element_masks, hapm_epoch_update, hapm_init,
+                        full_masks, maybe_update)
+from repro.data.synthetic import SyntheticCifar
+from repro.models import cnn
+from repro.train.optimizer import ReduceLROnPlateau, apply_updates, sgd
+
+
+@dataclasses.dataclass
+class TrainedModel:
+    name: str
+    cfg: cnn.ResNetConfig
+    params: dict
+    state: dict
+    masks: Optional[dict]
+    history: list
+    test_accuracy: float
+
+
+def _loss_fn(params, state, batch, cfg):
+    logits, new_state = cnn.apply(params, state, batch["x"], cfg, train=True)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], axis=-1))
+    return nll, new_state
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1, 2))
+def _train_step(params, state, opt_state, masks, batch, lr, cfg):
+    mp = apply_masks(params, masks)
+    (loss, new_state), grads = jax.value_and_grad(_loss_fn, has_aux=True)(
+        mp, state, batch, cfg)
+    opt_init, opt_update = sgd(momentum=0.9, weight_decay=1e-4)
+    updates, opt_state = opt_update(grads, opt_state, params, lr)
+    params = apply_masks(apply_updates(params, updates), masks)
+    return params, new_state, opt_state, loss
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _eval_batch(params, state, x, cfg):
+    logits, _ = cnn.apply(params, state, x, cfg, train=False)
+    return jnp.argmax(logits, -1)
+
+
+def evaluate(params, state, cfg, ds: SyntheticCifar, batch=256) -> float:
+    correct = 0
+    for i in range(0, ds.num_test - batch + 1, batch):
+        pred = _eval_batch(params, state, jnp.asarray(ds.test_x[i:i + batch]), cfg)
+        correct += int(jnp.sum(pred == jnp.asarray(ds.test_y[i:i + batch])))
+    n = (ds.num_test // batch) * batch
+    return correct / max(n, 1)
+
+
+def train_variant(
+    variant: str,
+    ds: SyntheticCifar,
+    epochs: int,
+    *,
+    batch: int = 128,
+    base_lr: float = 0.05,
+    init_from: Optional[TrainedModel] = None,
+    n_cu: int = 12,
+    uniform_sparsity: float = 0.8,
+    hapm_sparsity: float = 0.5,
+    verbose: bool = True,
+) -> TrainedModel:
+    assert variant in ("fp32", "int8", "uniform", "hapm")
+    cfg = cnn.ResNetConfig(quantized=(variant != "fp32"))
+    if init_from is not None:
+        # deep-copy: the jitted step donates its inputs, and a TrainedModel
+        # may seed several variants (fp32 -> int8 -> {uniform, hapm})
+        params = jax.tree.map(jnp.array, init_from.params)
+        state = jax.tree.map(jnp.array, init_from.state)
+    else:
+        params, state = cnn.init(jax.random.PRNGKey(0), cfg)
+
+    opt_init, _ = sgd(momentum=0.9, weight_decay=1e-4)
+    opt_state = opt_init(params)
+    masks = full_masks(params, cnn.is_conv_weight)   # all-ones until a pruner acts
+    steps_per_epoch = ds.num_train // batch
+
+    ucfg = UniformPruneConfig(
+        target_sparsity=uniform_sparsity, begin_step=0,
+        end_step=max(int(0.7 * epochs * steps_per_epoch), 1),
+        update_every=max(steps_per_epoch // 2, 1))
+    specs = cnn.conv_group_specs(params, n_cu)
+    hcfg = HAPMConfig(hapm_sparsity, epochs)
+    hstate = hapm_init(specs, hcfg)
+
+    sched = ReduceLROnPlateau(base_lr=base_lr, factor=0.5, patience=2)
+    history = []
+    step = 0
+    for epoch in range(epochs):
+        if variant == "hapm":
+            hstate = hapm_epoch_update(hstate, specs, params, hcfg)
+            masks = hapm_element_masks(specs, hstate)
+        losses = []
+        for x, y in ds.epoch(batch, seed=epoch + 1):
+            if variant == "uniform":
+                masks = maybe_update(step, apply_masks(params, masks), masks, ucfg)
+            b = {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+            params, state, opt_state, loss = _train_step(
+                params, state, opt_state, masks, b, sched.lr, cfg)
+            losses.append(float(loss))
+            step += 1
+        mean_loss = float(np.mean(losses))
+        sched.step(mean_loss)
+        history.append(mean_loss)
+        if verbose:
+            print(f"  [{variant}] epoch {epoch + 1}/{epochs}: loss={mean_loss:.4f} "
+                  f"lr={sched.lr:.4f}")
+
+    params = apply_masks(params, masks)
+    acc = evaluate(params, state, cfg, ds)
+    if verbose:
+        print(f"  [{variant}] test accuracy: {acc:.4f}")
+    return TrainedModel(variant, cfg, params, state, masks, history, acc)
+
+
+def train_all_variants(ds, epochs=(6, 3, 4, 4), verbose=True, n_cu=12):
+    """Paper Table-I pipeline: fp32 -> int8 (from fp32) -> {uniform, hapm}."""
+    m1 = train_variant("fp32", ds, epochs[0], verbose=verbose)
+    m2 = train_variant("int8", ds, epochs[1], init_from=m1, verbose=verbose)
+    m3 = train_variant("uniform", ds, epochs[2], init_from=m2, verbose=verbose)
+    m4 = train_variant("hapm", ds, epochs[3], init_from=m2, n_cu=n_cu, verbose=verbose)
+    return m1, m2, m3, m4

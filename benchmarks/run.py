@@ -1,0 +1,60 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper table/figure:
+  bench_cycle_model      — §II-E worked example + Fig. 5
+  bench_training         — Table I + Fig. 3
+  bench_inference        — Table II + Fig. 6 + Fig. 4
+  bench_blocksparse      — beyond-paper TPU tile-HAPM kernel
+  bench_roofline         — assignment roofline table (reads dryrun_results.json)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (bench_blocksparse, bench_cycle_model, bench_inference,
+               bench_roofline, bench_training)
+
+ALL = {
+    "cycle_model": bench_cycle_model,
+    "training": bench_training,
+    "inference": bench_inference,
+    "blocksparse": bench_blocksparse,
+    "roofline": bench_roofline,
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", choices=sorted(ALL), default=None)
+    ap.add_argument("--fast", action="store_true", help="minimal sizes (CI)")
+    ap.add_argument("--paper", action="store_true", help="full paper protocol")
+    ap.add_argument("--dryrun-json", default="dryrun_results.json")
+    args = ap.parse_args(argv)
+
+    names = args.only or list(ALL)
+    # training feeds inference; run in declaration order and share results
+    failures = []
+    shared = {}
+    for name in names:
+        mod = ALL[name]
+        t0 = time.time()
+        try:
+            if name == "inference" and "training" in shared:
+                args._trained = shared["training"]
+            out = mod.run(args)
+            shared[name] = out
+            print(f"\n[{name}] OK in {time.time() - t0:.1f}s\n")
+        except Exception:
+            failures.append(name)
+            print(f"\n[{name}] FAILED:\n{traceback.format_exc()}\n")
+    print("=" * 72)
+    print(f"benchmarks: {len(names) - len(failures)}/{len(names)} OK"
+          + (f"; failed: {failures}" if failures else ""))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,91 @@
+"""Beyond-paper example: HAPM tile pruning on a transformer LM + serving
+its FFN through the block-sparse Pallas kernel (the TPU DSB analogue).
+
+Trains a small LM for a few hundred steps with gradual HAPM tile pruning,
+then swaps the pruned FFN matmuls onto the scalar-prefetch block-sparse
+kernel and verifies logits match the masked-dense reference.
+
+Run: PYTHONPATH=src python examples/prune_lm_blocksparse.py [--steps 120]
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HAPMConfig, hapm_epoch_update, hapm_group_sparsity, hapm_init
+from repro.core.groups import apply_group_mask
+from repro.data.synthetic import TokenStream
+from repro.kernels import ops
+from repro.models import lm
+from repro.models.lm_config import LMConfig
+from repro.launch.train import build_train_step, init_group_masks
+from repro.sparse.block_mask import plan_from_tile_mask
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--sparsity", type=float, default=0.5)
+    ap.add_argument("--epochs", type=int, default=6)
+    args = ap.parse_args(argv)
+
+    cfg = LMConfig("demo-lm", "dense", num_layers=2, d_model=256, num_heads=4,
+                   num_kv_heads=2, d_ff=512, vocab_size=512, remat="none",
+                   dtype="float32", block_size=(128, 128))
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {n/1e6:.2f}M params; HAPM tile groups of {cfg.block_size}")
+
+    specs = lm.group_specs(params, cfg)
+    hcfg = HAPMConfig(args.sparsity, args.epochs)
+    hstate = hapm_init(specs, hcfg)
+    print(f"{hstate.total_groups} tile groups across "
+          f"{sum(1 for s in jax.tree.leaves(specs, is_leaf=lambda x: x is not None and not isinstance(x, dict)) if s is not None)} weight matrices")
+
+    train_step, opt_init = build_train_step(cfg, specs, lr=1e-3)
+    step_jit = jax.jit(train_step, donate_argnums=(0, 1))
+    opt_state = opt_init(params)
+    ds = TokenStream(cfg.vocab_size, seq_len=64)
+    it = ds.batches(16, seed=0)
+
+    steps_per_epoch = max(args.steps // args.epochs, 1)
+    gmasks = init_group_masks(specs)
+    for step in range(args.steps):
+        if step % steps_per_epoch == 0:
+            hstate = hapm_epoch_update(hstate, specs, params, hcfg)
+            gmasks = jax.tree.map(
+                lambda m: None if m is None else jnp.asarray(m),
+                hstate.group_masks, is_leaf=lambda x: x is None)
+        params, opt_state, loss = step_jit(params, opt_state, gmasks, next(it))
+        if step % 20 == 0:
+            print(f"  step {step:4d}: loss={float(loss):.4f} "
+                  f"group-sparsity={hapm_group_sparsity(hstate):.2f}")
+    print(f"final loss {float(loss):.4f}, "
+          f"tile sparsity {hapm_group_sparsity(hstate):.2f}")
+
+    # ---- serve the pruned FFN through the block-sparse kernel ----
+    print("\nswapping pruned FFN matmuls onto the block-sparse Pallas kernel:")
+    blk = jax.tree.map(lambda a: a[0], params["blocks"])   # layer 0
+    spec_wi = specs["blocks"]["ffn"]["wi"]
+    gm_wi = np.asarray(hstate.group_masks["blocks"]["ffn"]["wi"]).reshape(spec_wi.tiles)[0]
+    w_masked = apply_group_mask(
+        dataclasses.replace(spec_wi, shape=spec_wi.shape[1:],
+                            _meta=(spec_wi.block, spec_wi.tiles[1:]),
+                            num_groups=int(np.prod(spec_wi.tiles[1:]))),
+        blk["ffn"]["wi"], jnp.asarray(gm_wi.reshape(-1)))
+    plan = plan_from_tile_mask(gm_wi > 0, spec_wi.block)
+    f = ops.make_block_sparse_matmul(plan, gm_wi > 0)
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, cfg.d_model))
+    y_kernel = f(x, blk["ffn"]["wi"])
+    y_ref = x @ w_masked
+    err = float(jnp.max(jnp.abs(y_kernel - y_ref)))
+    print(f"  layer0 wi: {plan.skipped_tiles}/{plan.tiles[0]*plan.tiles[1]} tiles "
+          f"skipped; kernel-vs-masked-dense max err = {err:.2e}")
+    print(f"  grid steps per output column: {plan.max_nnz} (dense: {plan.tiles[0]})")
+    assert err < 1e-4
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: the paper's pipeline in 60 seconds.
+
+1. Build the 21-conv ResNet, form HAPM groups from the accelerator schedule.
+2. Prune 50% of groups (one-shot here; gradual in the full example).
+3. Price inference on the paper's Zedboard config with/without DSB.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.accel import BOARDS, simulate
+from repro.core import (HAPMConfig, apply_masks, hapm_element_masks,
+                        hapm_epoch_update, hapm_init, hapm_group_sparsity)
+from repro.models import cnn
+
+
+def main():
+    cfg = cnn.ResNetConfig()
+    params, state = cnn.init(jax.random.PRNGKey(0), cfg)
+    board = BOARDS["zedboard_100mhz_72dsp"]
+    print(f"model: 21-conv ResNet ({cnn.network_ops(cfg, params)/1e9:.4f} GOP/img); "
+          f"board: {board.dsps} DSPs @ {board.freq_mhz:.0f} MHz")
+
+    # HAPM: groups = the weights one schedule step processes together
+    specs = cnn.conv_group_specs(params, board.n_cu)
+    hcfg = HAPMConfig(target_group_sparsity=0.5, epochs=1)
+    hstate = hapm_init(specs, hcfg)
+    print(f"schedule analysis: {hstate.total_groups} groups "
+          f"(= (f_block, g) steps across all layers)")
+
+    hstate = hapm_epoch_update(hstate, specs, params, hcfg)
+    pruned = apply_masks(params, hapm_element_masks(specs, hstate))
+    print(f"pruned {hapm_group_sparsity(hstate):.0%} of groups")
+
+    base = simulate(params, state, cfg, board)
+    fast = simulate(pruned, state, cfg, board)
+    no_dsb = simulate(pruned, state, cfg, dataclasses.replace(board, dsb=False))
+    print(f"\ninference time per image (cycle model):")
+    print(f"  dense    + DSB : {base.mean_time_per_image_s*1e3:7.2f} ms  "
+          f"({base.gops:5.2f} GOPs)")
+    print(f"  HAPM 50% + DSB : {fast.mean_time_per_image_s*1e3:7.2f} ms  "
+          f"({fast.gops:5.2f} GOPs)  <- {base.mean_time_per_image_s/fast.mean_time_per_image_s:.2f}x")
+    print(f"  HAPM 50% no DSB: {no_dsb.mean_time_per_image_s*1e3:7.2f} ms  "
+          f"(sparsity useless without the bypass hardware)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Serving example: batched prefill + decode loop with KV caches, greedy
+sampling, and per-phase token accounting — the ``serve_step`` that the
+decode_32k / long_500k dry-run cells lower, at host scale.
+
+Run: PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-9b] [--tokens 32]
+(arch resolves to its reduced smoke config on CPU)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import lm
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    cfg = registry.get(args.arch).smoke
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    print(f"serving {args.arch} (smoke config: {cfg.num_layers}L d={cfg.d_model})")
+
+    B, P, T = args.batch, args.prompt_len, args.tokens
+    max_len = P + T
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab_size)
+
+    prefill = jax.jit(lambda p, b: lm.prefill(p, b, cfg, max_len=max_len))
+    decode = jax.jit(lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg))
+
+    t0 = time.time()
+    logits, caches = prefill(params, {"tokens": prompts})
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+    print(f"prefill: {B}×{P} tokens in {t_prefill*1e3:.0f} ms "
+          f"({B*P/t_prefill:.0f} tok/s)")
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(T - 1):
+        pos = jnp.full((B,), P + i, jnp.int32)
+        logits, caches = decode(params, caches, tok, pos)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+    tok.block_until_ready()
+    t_dec = time.time() - t0
+    gen = np.asarray(jnp.stack(out, 1))
+    print(f"decode: {B}×{T-1} tokens in {t_dec*1e3:.0f} ms "
+          f"({B*(T-1)/max(t_dec,1e-9):.0f} tok/s)")
+    print(f"sample continuation (row 0): {gen[0][:16].tolist()}")
+
+    # consistency: decode path reproduces teacher-forced forward
+    full = jnp.concatenate([prompts, gen[:, :-1]], axis=1)
+    ref_logits, _, _ = lm.forward(params, {"tokens": full}, cfg)
+    ref_tok = jnp.argmax(ref_logits[:, P - 1:], -1)
+    agree = float(jnp.mean((ref_tok[:, :gen.shape[1]] == gen)))
+    print(f"greedy-path agreement with teacher-forced forward: {agree:.2%}")
+
+
+if __name__ == "__main__":
+    main()

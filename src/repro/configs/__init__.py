@@ -1,0 +1,3 @@
+"""Architecture configs: registry + per-arch modules + input shapes."""
+from .registry import REGISTRY, ArchEntry, cells, config_for, get
+from .shapes import SHAPES, ShapeSpec, input_specs

@@ -1,0 +1,247 @@
+"""Schedule-derived pruning groups (the heart of HAPM).
+
+The paper's Algorithm-2 schedule dispatches, at each ``(f_block, g)`` step,
+the ``N_CU`` kernels ``k[:, :, g, f_block*N_CU : (f_block+1)*N_CU]`` to the
+CU-matrices in lock-step. The DSB can skip that step only when the *whole*
+slab is zero — so that slab is the pruning group (``fpga_conv_groups``).
+
+On TPU the temporal unit of work is one grid step of the Pallas block-sparse
+matmul: one ``(bk, bn)`` weight tile (``tpu_tile_groups``). Both backends
+produce the same :class:`GroupSpec`, consumed by the single HAPM
+implementation in :mod:`repro.core.hapm`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """Partition of one weight array into hardware-schedule groups.
+
+    The partition is expressed as a padded reshape: the weight is (zero-)
+    padded to ``padded_shape``, reshaped to interleave group axes, and
+    reduced over the per-group axes. ``num_groups`` groups, each of (at most)
+    ``group_size`` weights.
+    """
+
+    shape: Tuple[int, ...]             # original weight shape
+    kind: str                          # "fpga_conv" | "tpu_tile" | "flat"
+    num_groups: int
+    group_size: int
+    # implementation detail used by score/expand:
+    _meta: tuple = ()
+
+    # -- API ---------------------------------------------------------------
+    def group_scores(self, w: jnp.ndarray) -> jnp.ndarray:
+        """Sum of |w| per group -> (num_groups,). Paper's scoring (Alg. 3 l.7)."""
+        raise NotImplementedError
+
+    def expand(self, group_mask: jnp.ndarray) -> jnp.ndarray:
+        """(num_groups,) {0,1} -> element mask of ``self.shape``."""
+        raise NotImplementedError
+
+    def group_elem_counts(self) -> np.ndarray:
+        """Actual number of weight elements per group (edge groups may be smaller)."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# FPGA conv groups (paper Algorithm 2 / section III)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FpgaConvGroupSpec(GroupSpec):
+    """Weight layout (kx, ky, cin, cout); group = (g, f_block):
+    all kx*ky spatial taps of N_CU consecutive output filters for one input
+    channel. Group ids are ordered (cin-major, then f_block) so that
+    ``accel.cycle_model`` can map skipped groups to skipped schedule steps.
+    """
+
+    @property
+    def n_cu(self) -> int:
+        return self._meta[0]
+
+    @property
+    def n_fblocks(self) -> int:
+        return self._meta[1]
+
+    def _slabs(self, w: jnp.ndarray) -> jnp.ndarray:
+        kx, ky, cin, cout = self.shape
+        n_cu, n_fb = self._meta
+        pad = n_fb * n_cu - cout
+        if pad:
+            w = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        # -> (cin, n_fb, kx*ky*n_cu)
+        w = w.reshape(kx * ky, cin, n_fb, n_cu)
+        return jnp.transpose(w, (1, 2, 0, 3)).reshape(cin, n_fb, kx * ky * n_cu)
+
+    def group_scores(self, w: jnp.ndarray) -> jnp.ndarray:
+        return jnp.sum(jnp.abs(self._slabs(w)), axis=-1).reshape(-1)
+
+    def expand(self, group_mask: jnp.ndarray) -> jnp.ndarray:
+        kx, ky, cin, cout = self.shape
+        n_cu, n_fb = self._meta
+        gm = group_mask.reshape(cin, n_fb)            # (cin, n_fb)
+        # -> (kx,ky,cin,cout_padded) -> crop
+        m = jnp.broadcast_to(gm[None, None, :, :, None], (kx, ky, cin, n_fb, n_cu))
+        m = m.reshape(kx, ky, cin, n_fb * n_cu)[..., :cout]
+        return m.astype(jnp.float32)
+
+    def group_elem_counts(self) -> np.ndarray:
+        kx, ky, cin, cout = self.shape
+        n_cu, n_fb = self._meta
+        counts = np.full((cin, n_fb), kx * ky * n_cu, np.int64)
+        rem = cout - (n_fb - 1) * n_cu
+        counts[:, -1] = kx * ky * rem
+        return counts.reshape(-1)
+
+
+def fpga_conv_groups(weight_shape: Sequence[int], n_cu: int) -> FpgaConvGroupSpec:
+    kx, ky, cin, cout = weight_shape
+    n_fb = -(-cout // n_cu)  # ceil
+    return FpgaConvGroupSpec(
+        shape=tuple(weight_shape),
+        kind="fpga_conv",
+        num_groups=cin * n_fb,
+        group_size=kx * ky * n_cu,
+        _meta=(n_cu, n_fb),
+    )
+
+
+# ---------------------------------------------------------------------------
+# TPU tile groups (Pallas BlockSpec schedule)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TpuTileGroupSpec(GroupSpec):
+    """Weight layout (..., K, N); group = one (bk, bn) tile of the trailing
+    2-D matmul operand, replicated over leading (e.g. expert / layer-stack)
+    axes — leading axes get independent tiles. Tile order is
+    (leading..., ki, ni) row-major, matching ``sparse.block_mask`` and the
+    Pallas kernel's grid.
+    """
+
+    @property
+    def block(self) -> Tuple[int, int]:
+        return self._meta[0]
+
+    @property
+    def tiles(self) -> Tuple[int, ...]:
+        """(leading..., nKb, nNb)."""
+        return self._meta[1]
+
+    def _tiled_abs(self, w: jnp.ndarray) -> jnp.ndarray:
+        (bk, bn), tile_shape = self._meta
+        *lead, K, N = self.shape
+        nKb, nNb = tile_shape[-2], tile_shape[-1]
+        padK, padN = nKb * bk - K, nNb * bn - N
+        if padK or padN:
+            pad = [(0, 0)] * len(lead) + [(0, padK), (0, padN)]
+            w = jnp.pad(w, pad)
+        w = w.reshape(*lead, nKb, bk, nNb, bn)
+        return jnp.sum(jnp.abs(w), axis=(-3, -1))  # (*lead, nKb, nNb)
+
+    def group_scores(self, w: jnp.ndarray) -> jnp.ndarray:
+        return self._tiled_abs(w).reshape(-1)
+
+    def tile_mask(self, group_mask: jnp.ndarray) -> jnp.ndarray:
+        """(num_groups,) -> (*lead, nKb, nNb) tile mask (kernel-facing)."""
+        return group_mask.reshape(self.tiles)
+
+    def expand(self, group_mask: jnp.ndarray) -> jnp.ndarray:
+        (bk, bn), tile_shape = self._meta
+        *lead, K, N = self.shape
+        nKb, nNb = tile_shape[-2], tile_shape[-1]
+        gm = group_mask.reshape(*lead, nKb, nNb)
+        m = jnp.broadcast_to(
+            gm[..., :, None, :, None],
+            (*lead, nKb, bk, nNb, bn),
+        ).reshape(*lead, nKb * bk, nNb * bn)
+        return m[..., :K, :N].astype(jnp.float32)
+
+    def group_elem_counts(self) -> np.ndarray:
+        (bk, bn), tile_shape = self._meta
+        *lead, K, N = self.shape
+        nKb, nNb = tile_shape[-2], tile_shape[-1]
+        kc = np.full(nKb, bk, np.int64)
+        kc[-1] = K - (nKb - 1) * bk
+        nc = np.full(nNb, bn, np.int64)
+        nc[-1] = N - (nNb - 1) * bn
+        per2d = np.outer(kc, nc).reshape(-1)
+        n_lead = int(np.prod(lead)) if lead else 1
+        return np.tile(per2d, n_lead)
+
+
+def tpu_tile_groups(weight_shape: Sequence[int], block: Tuple[int, int] = (128, 128)) -> TpuTileGroupSpec:
+    *lead, K, N = weight_shape
+    bk, bn = block
+    nKb, nNb = -(-K // bk), -(-N // bn)
+    n_lead = int(np.prod(lead)) if lead else 1
+    return TpuTileGroupSpec(
+        shape=tuple(weight_shape),
+        kind="tpu_tile",
+        num_groups=n_lead * nKb * nNb,
+        group_size=bk * bn,
+        _meta=((bk, bn), (*lead, nKb, nNb)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Flat groups (degenerate: each weight its own group == unstructured)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FlatGroupSpec(GroupSpec):
+    def group_scores(self, w: jnp.ndarray) -> jnp.ndarray:
+        return jnp.abs(w).reshape(-1)
+
+    def expand(self, group_mask: jnp.ndarray) -> jnp.ndarray:
+        return group_mask.reshape(self.shape).astype(jnp.float32)
+
+    def group_elem_counts(self) -> np.ndarray:
+        return np.ones(self.num_groups, np.int64)
+
+
+def flat_groups(weight_shape: Sequence[int]) -> FlatGroupSpec:
+    n = int(np.prod(weight_shape))
+    return FlatGroupSpec(shape=tuple(weight_shape), kind="flat", num_groups=n, group_size=1)
+
+
+# ---------------------------------------------------------------------------
+# In-graph masked-weight application (never materializes the element mask)
+# ---------------------------------------------------------------------------
+
+def apply_group_mask(spec: GroupSpec, w, group_mask):
+    """w ⊙ expand(group_mask) computed via tiled reshape-broadcast: the mask
+    stays (num_groups,)-sized in memory and the multiply fuses into the
+    weight load — crucial for stacked LM weights where a materialized f32
+    element mask would double parameter memory (and replicate!).
+    """
+    import jax.numpy as jnp
+    if isinstance(spec, TpuTileGroupSpec):
+        (bk, bn), tile_shape = spec._meta
+        *lead, K, N = spec.shape
+        nKb, nNb = tile_shape[-2], tile_shape[-1]
+        gm = group_mask.reshape(*lead, nKb, 1, nNb, 1).astype(w.dtype)
+        if nKb * bk == K and nNb * bn == N:   # fast path: pure reshape
+            wt = w.reshape(*lead, nKb, bk, nNb, bn)
+            return (wt * gm).reshape(spec.shape)
+        padK, padN = nKb * bk - K, nNb * bn - N
+        wp = jnp.pad(w, [(0, 0)] * len(lead) + [(0, padK), (0, padN)])
+        wt = wp.reshape(*lead, nKb, bk, nNb, bn) * gm
+        return wt.reshape(*lead, nKb * bk, nNb * bn)[..., :K, :N]
+    if isinstance(spec, FpgaConvGroupSpec):
+        kx, ky, cin, cout = spec.shape
+        n_cu, n_fb = spec._meta
+        gm = group_mask.reshape(cin, n_fb)
+        pad = n_fb * n_cu - cout
+        wp = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, pad))) if pad else w
+        wt = wp.reshape(kx, ky, cin, n_fb, n_cu) * gm[None, None, :, :, None].astype(w.dtype)
+        return wt.reshape(kx, ky, cin, n_fb * n_cu)[..., :cout]
+    return w * spec.expand(group_mask).astype(w.dtype)

@@ -1,0 +1,81 @@
+"""Mask pytrees and sparsity bookkeeping.
+
+A *mask tree* mirrors a parameter pytree: prunable leaves carry a {0,1}
+array of the same shape, non-prunable leaves carry ``None``. All pruning
+methods in :mod:`repro.core` produce and consume this representation, so the
+training loop has a single ``apply_masks`` call regardless of method.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _is_none(x) -> bool:
+    return x is None
+
+
+def tree_map_masked(fn: Callable, params: PyTree, masks: PyTree, *rest: PyTree) -> PyTree:
+    """Map ``fn(param, mask, *rest)`` over leaves, passing mask=None through."""
+    return jax.tree.map(fn, params, masks, *rest, is_leaf=_is_none)
+
+
+def apply_masks(params: PyTree, masks: PyTree) -> PyTree:
+    """Zero out pruned weights. None-mask leaves pass through untouched."""
+    def f(p, m):
+        if m is None:
+            return p
+        return p * m.astype(p.dtype)
+    return tree_map_masked(f, params, masks)
+
+
+def full_masks(params: PyTree, prunable: Callable[[tuple, jnp.ndarray], bool]) -> PyTree:
+    """Build an all-ones mask tree. ``prunable(path, leaf) -> bool`` selects leaves.
+
+    ``path`` is a tuple of jax.tree_util key entries (dict keys etc.).
+    """
+    def f(path, leaf):
+        if prunable(path, leaf):
+            return jnp.ones(leaf.shape, jnp.float32)
+        return None
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def sparsity(mask: Optional[jnp.ndarray]) -> float:
+    """Fraction of zeros in one mask."""
+    if mask is None:
+        return 0.0
+    return float(1.0 - jnp.mean(mask))
+
+
+def global_sparsity(masks: PyTree) -> float:
+    """Weight-count-weighted sparsity over all masked leaves."""
+    leaves = [l for l in jax.tree.leaves(masks, is_leaf=_is_none) if l is not None]
+    if not leaves:
+        return 0.0
+    total = sum(int(np.prod(l.shape)) for l in leaves)
+    zeros = sum(float(jnp.sum(1.0 - l)) for l in leaves)
+    return zeros / max(total, 1)
+
+
+def per_leaf_sparsity(masks: PyTree) -> dict:
+    """path-string -> sparsity, for Fig.-4-style reporting."""
+    out = {}
+
+    def f(path, m):
+        if m is not None:
+            out[jax.tree_util.keystr(path)] = float(1.0 - jnp.mean(m))
+        return m
+
+    jax.tree_util.tree_map_with_path(f, masks, is_leaf=_is_none)
+    return out
+
+
+def count_params(masks: PyTree) -> int:
+    leaves = [l for l in jax.tree.leaves(masks, is_leaf=_is_none) if l is not None]
+    return sum(int(np.prod(l.shape)) for l in leaves)

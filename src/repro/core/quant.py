@@ -1,0 +1,74 @@
+"""Fixed-point fake quantization emulating the paper's DSP48E1 arithmetic.
+
+The paper trains with QKeras using Q2.5 for coefficients and Q3.4 for layer
+outputs (1 sign bit + m integer bits + n fractional bits = 8 bits). We
+emulate with round-to-nearest fake-quant in f32 — bit-exact on the
+representable grid — and a straight-through estimator so it can sit inside
+the training graph (quantization-aware training, like QKeras).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    int_bits: int
+    frac_bits: int
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.int_bits + self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.frac_bits)
+
+    @property
+    def max_val(self) -> float:
+        return float(2 ** self.int_bits) - 1.0 / self.scale
+
+    @property
+    def min_val(self) -> float:
+        return -float(2 ** self.int_bits)
+
+
+Q2_5 = QFormat(2, 5)   # paper: network coefficients
+Q3_4 = QFormat(3, 4)   # paper: layer outputs
+
+
+@jax.custom_vjp
+def fake_quant(x: jnp.ndarray, scale: float, min_val: float, max_val: float) -> jnp.ndarray:
+    q = jnp.round(x * scale) / scale
+    return jnp.clip(q, min_val, max_val)
+
+
+def _fq_fwd(x, scale, min_val, max_val):
+    return fake_quant(x, scale, min_val, max_val), (x, min_val, max_val)
+
+
+def _fq_bwd(res, g):
+    x, min_val, max_val = res
+    # straight-through inside the representable range, zero outside (clipped STE)
+    pass_through = jnp.logical_and(x >= min_val, x <= max_val)
+    return (jnp.where(pass_through, g, 0.0), None, None, None)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def quantize(x: jnp.ndarray, fmt: QFormat) -> jnp.ndarray:
+    return fake_quant(x, fmt.scale, fmt.min_val, fmt.max_val)
+
+
+def to_int(x: jnp.ndarray, fmt: QFormat) -> jnp.ndarray:
+    """Integer codes (what the DSP48E1 actually multiplies)."""
+    q = jnp.clip(jnp.round(x * fmt.scale), fmt.min_val * fmt.scale, fmt.max_val * fmt.scale)
+    return q.astype(jnp.int32)
+
+
+def from_int(codes: jnp.ndarray, fmt: QFormat) -> jnp.ndarray:
+    return codes.astype(jnp.float32) / fmt.scale

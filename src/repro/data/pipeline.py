@@ -1,0 +1,47 @@
+"""Input pipeline: host -> device placement with global-batch sharding and
+single-slot background prefetch (overlaps host batch synthesis/augmentation
+with device compute)."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Iterator, Optional
+
+import jax
+import numpy as np
+
+from ..dist.api import ShardingRules
+from ..dist.sharding import batch_specs, to_shardings
+
+PyTree = Any
+
+
+def shard_batch(batch: PyTree, rules: Optional[ShardingRules]) -> PyTree:
+    """Host numpy batch -> device arrays, sharded over the batch axes."""
+    if rules is None:
+        return jax.tree.map(lambda x: None if x is None else jax.device_put(x), batch)
+    shardings = to_shardings(batch_specs(batch, rules), rules.mesh)
+    return jax.tree.map(
+        lambda x, s: None if x is None else jax.device_put(x, s), batch, shardings)
+
+
+def prefetch(it: Iterator[PyTree], rules: Optional[ShardingRules] = None,
+             depth: int = 2) -> Iterator[PyTree]:
+    """Background-thread prefetch of device-placed batches."""
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    stop = object()
+
+    def worker():
+        try:
+            for b in it:
+                q.put(shard_batch(b, rules))
+        finally:
+            q.put(stop)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        b = q.get()
+        if b is stop:
+            return
+        yield b

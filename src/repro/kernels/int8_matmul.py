@@ -1,0 +1,68 @@
+"""int8 fixed-point matmul Pallas kernel (the DSP48E1 Q-format arithmetic,
+MXU edition): int8 × int8 → int32 accumulation, scalar dequant epilogue.
+
+The paper's accelerator multiplies Q3.4 activations by Q2.5 coefficients in
+the DSP slices; on TPU the same integer arithmetic maps onto the MXU's
+int8 path. Accumulation is exact (int32), so the kernel is bit-identical
+to ``ref.int8_matmul_ref`` — tests assert equality, not closeness.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(scale_ref, x_ref, w_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(jnp.float32) * scale_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def int8_matmul(
+    x_codes: jnp.ndarray,      # (M, K) int8
+    w_codes: jnp.ndarray,      # (K, N) int8
+    scale: jnp.ndarray,        # (1,) f32 — combined dequant scale
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    M, K = x_codes.shape
+    _, N = w_codes.shape
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k, s: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k, s: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, s: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(scale, x_codes, w_codes)

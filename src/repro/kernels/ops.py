@@ -1,0 +1,123 @@
+"""Jit'd public wrappers around the Pallas kernels: shape normalization
+(leading batch dims, M-padding), interpret-mode auto-detection (CPU runs the
+kernel bodies in interpret mode; TPU compiles them), and custom VJPs so the
+kernels compose with autodiff.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import quant as Q
+from ..sparse.block_mask import BlockSparsePlan, plan_from_tile_mask, transpose_plan
+from . import ref
+from .block_sparse_matmul import block_sparse_matmul
+from .int8_matmul import int8_matmul
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x2d: jnp.ndarray, bm: int):
+    M = x2d.shape[0]
+    Mp = -(-M // bm) * bm
+    if Mp != M:
+        x2d = jnp.pad(x2d, ((0, Mp - M), (0, 0)))
+    return x2d, M
+
+
+def make_block_sparse_matmul(plan: BlockSparsePlan, tile_mask: np.ndarray, *, bm: int = 128):
+    """Build ``f(x, w) -> x @ (w ⊙ mask)`` for a *fixed* pruning plan.
+
+    The plan is static (recompiled when HAPM prunes more groups — an
+    epoch-boundary event). Backward:
+      dx = dy @ (w ⊙ m)^T   — block-sparse with the transposed plan
+      dw = (x^T dy) ⊙ m     — dense then tile-masked (dw is dense anyway)
+    """
+    t_plan = transpose_plan(plan, tile_mask)
+    idx, cnt = jnp.asarray(plan.idx), jnp.asarray(plan.cnt)
+    t_idx, t_cnt = jnp.asarray(t_plan.idx), jnp.asarray(t_plan.cnt)
+    tmask = jnp.asarray(tile_mask)
+    block = plan.block
+
+    def _fwd2d(x2d, w):
+        xp, M = _pad_rows(x2d, bm)
+        out = block_sparse_matmul(xp, w, idx, cnt, block=block, bm=bm,
+                                  interpret=_interpret())
+        return out[:M]
+
+    @jax.custom_vjp
+    def f(x, w):
+        lead = x.shape[:-1]
+        out = _fwd2d(x.reshape(-1, x.shape[-1]), w)
+        return out.reshape(*lead, w.shape[1])
+
+    def f_fwd(x, w):
+        return f(x, w), (x, w)
+
+    def f_bwd(res, g):
+        x, w = res
+        lead = x.shape[:-1]
+        g2d = g.reshape(-1, w.shape[1])
+        gp, M = _pad_rows(g2d, bm)
+        dx = block_sparse_matmul(gp, jnp.swapaxes(w, 0, 1), t_idx, t_cnt,
+                                 block=t_plan.block, bm=bm, interpret=_interpret())[:M]
+        x2d = x.reshape(-1, x.shape[-1])
+        dw = jnp.dot(x2d.T.astype(jnp.float32), g2d.astype(jnp.float32))
+        dw = (dw * ref.expand_tile_mask(tmask, block, w.shape[0], w.shape[1])).astype(w.dtype)
+        return dx.reshape(x.shape).astype(x.dtype), dw
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+def fixed_point_matmul(
+    x: jnp.ndarray,                 # (..., K) float
+    w: jnp.ndarray,                 # (K, N) float
+    x_fmt: Q.QFormat = Q.Q3_4,
+    w_fmt: Q.QFormat = Q.Q2_5,
+    *,
+    bm: int = 128,
+) -> jnp.ndarray:
+    """Paper-faithful fixed-point GEMM: quantize to integer codes, int8 MXU
+    matmul, scalar dequant. Straight-through gradient."""
+    lead = x.shape[:-1]
+    K, N = w.shape
+
+    @jax.custom_vjp
+    def f(x, w):
+        xc = Q.to_int(x, x_fmt).astype(jnp.int8).reshape(-1, K)
+        wc = Q.to_int(w, w_fmt).astype(jnp.int8)
+        xp, M = _pad_rows(xc, bm)
+        scale = jnp.asarray([1.0 / (x_fmt.scale * w_fmt.scale)], jnp.float32)
+        out = int8_matmul(xp, wc, scale, bm=bm, interpret=_interpret())[:M]
+        return out.reshape(*lead, N).astype(x.dtype)
+
+    def f_fwd(x, w):
+        return f(x, w), (x, w)
+
+    def f_bwd(res, g):
+        x, w = res
+        dx = (g @ w.T).astype(x.dtype)
+        x2d = x.reshape(-1, K)
+        g2d = g.reshape(-1, N)
+        dw = (x2d.T @ g2d).astype(w.dtype)
+        return dx, dw
+
+    f.defvjp(f_fwd, f_bwd)
+    return f(x, w)
+
+
+def block_sparse_from_hapm(w: np.ndarray, element_mask: np.ndarray,
+                           block: Tuple[int, int] = (128, 128), *, bm: int = 128):
+    """Convenience: HAPM element mask -> plan -> bound kernel + masked weight."""
+    from ..sparse.block_mask import tile_mask_from_weight
+    tm = tile_mask_from_weight(np.asarray(element_mask), block)
+    plan = plan_from_tile_mask(tm, block)
+    f = make_block_sparse_matmul(plan, tm, bm=bm)
+    return f, plan

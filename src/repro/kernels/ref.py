@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract:
+tests sweep shapes/dtypes and assert kernels match these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def expand_tile_mask(tile_mask: jnp.ndarray, block, K: int, N: int) -> jnp.ndarray:
+    bk, bn = block
+    nKb, nNb = tile_mask.shape
+    m = jnp.broadcast_to(tile_mask[:, None, :, None].astype(jnp.float32),
+                         (nKb, bk, nNb, bn)).reshape(nKb * bk, nNb * bn)
+    return m[:K, :N]
+
+
+def block_sparse_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, tile_mask: jnp.ndarray,
+                            block) -> jnp.ndarray:
+    """x: (M, K) @ (w ⊙ expand(tile_mask)): (K, N) -> (M, N), f32 accumulation."""
+    m = expand_tile_mask(tile_mask, block, w.shape[0], w.shape[1]).astype(w.dtype)
+    return jnp.dot(x, w * m, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def int8_matmul_ref(x_codes: jnp.ndarray, w_codes: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """int8 codes GEMM with int32 accumulation and scalar dequant epilogue.
+
+    Bit-exact contract: out = (x_codes · w_codes) * scale computed in int32.
+    (Q3.4 activations × Q2.5 weights -> scale = 2^-4 · 2^-5.)
+    """
+    acc = jnp.dot(x_codes.astype(jnp.int32), w_codes.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * scale
+
+
+def masked_dense_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(x, w * mask.astype(w.dtype), preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,167 @@
+"""Compiled-artifact analysis: HLO collective-byte accounting, cost
+extraction, analytic model-FLOPs, and the three-term roofline.
+
+Hardware constants (assignment): TPU v5e-class — 197 TFLOP/s bf16/chip,
+819 GB/s HBM/chip, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+from typing import Dict, Optional
+
+from ..models.lm_config import LMConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# e.g.:  %ar = (f32[8,16]{1,0}, f32[4]{0}) all-reduce-start(f32[8,16] %a, ...)
+_OP_RE = re.compile(
+    r"=\s*(?P<result>[^=]*?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<suffix>-start|-done)?\(")
+
+
+def _shape_bytes(m) -> int:
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def parse_collectives(hlo_text: str) -> Dict:
+    """Per-collective result-shape byte totals + op counts.
+
+    ``bytes_operand``: sum of result-tuple bytes (the assignment's "operand
+    sizes" — for these ops result ≈ operand except all-gather, where result
+    is the gathered size, the honest per-device receive volume).
+    ``bytes_ring``: ring-transport estimate (all-reduce ≈ 2× payload;
+    others ≈ 1×) — used for the collective roofline term.
+    """
+    per_op_bytes: Counter = Counter()
+    per_op_count: Counter = Counter()
+    for m in _OP_RE.finditer(hlo_text):
+        if m.group("suffix") == "-done":
+            continue                       # counted at -start
+        op = m.group("op")
+        b = sum(_shape_bytes(t) for t in _TYPE_RE.finditer(m.group("result")))
+        per_op_bytes[op] += b
+        per_op_count[op] += 1
+    ring = sum((2 if op == "all-reduce" else 1) * b
+               for op, b in per_op_bytes.items())
+    return {
+        "bytes_by_op": dict(per_op_bytes),
+        "count_by_op": dict(per_op_count),
+        "bytes_operand": sum(per_op_bytes.values()),
+        "bytes_ring": ring,
+    }
+
+
+def cost_of(compiled) -> Dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    ca = ca or {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def memory_of(compiled) -> Dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    return {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_estimate_bytes": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                                + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Analytic model FLOPs (the MODEL_FLOPS / HLO_FLOPs "useful compute" ratio)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: LMConfig, shape_kind: str, seq_len: int, global_batch: int) -> float:
+    """6·N_active·tokens (train) / 2·N_active·tokens (prefill) /
+    2·N_active·batch (decode) + the quadratic attention term (causal)."""
+    n_active = cfg.active_param_count()
+    tokens = seq_len * global_batch
+    d_attn = cfg.num_heads * cfg.head_dim
+    n_attn_layers = _attn_layer_count(cfg)
+    if shape_kind == "train":
+        attn = 2.0 * global_batch * seq_len ** 2 * d_attn * n_attn_layers * 3  # fwd×1 + bwd×2
+        return 6.0 * n_active * tokens + attn
+    if shape_kind == "prefill":
+        attn = 2.0 * global_batch * seq_len ** 2 * d_attn * n_attn_layers
+        return 2.0 * n_active * tokens + attn
+    # decode: one token, attention linear in KV length
+    attn = 4.0 * global_batch * seq_len * d_attn * n_attn_layers
+    return 2.0 * n_active * global_batch + attn
+
+
+def _attn_layer_count(cfg: LMConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.hybrid_attn_every
+    if cfg.family == "ssm":
+        return 0
+    return cfg.num_layers
+
+
+@dataclasses.dataclass
+class Roofline:
+    chips: int
+    flops: float
+    bytes: float
+    coll_bytes: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> Dict:
+        return {
+            "chips": self.chips,
+            "hlo_flops": self.flops,
+            "hlo_bytes": self.bytes,
+            "collective_bytes": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+        }

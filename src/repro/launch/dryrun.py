@@ -1,0 +1,380 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape)
+cell on the production meshes, prove memory fits, and extract the roofline
+terms from the compiled artifacts.
+
+Because XLA's cost model counts while-loop (scan) bodies exactly once, the
+scan-based full compile is used for *memory/compilability/schedule*, and
+FLOPs/bytes/collective-bytes come from fully-unrolled *cost probes* at 1-
+and 2-repeat-unit scale, extrapolated linearly (exactly linear by
+construction — every cost is per-layer or constant; validated in
+tests/test_dryrun_small.py). Results cache to JSON (EXPERIMENTS.md source).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import registry
+from ..configs.shapes import SHAPES, input_specs
+from ..dist import sharding as SH
+from ..dist.api import use_rules
+from ..models import lm
+from ..models.lm_config import LMConfig
+from ..train.optimizer import AdamWState
+from . import analysis as AN
+from .mesh import make_production_mesh
+from .train import build_train_step, build_decode, build_prefill, init_group_masks
+
+PyTree = Any
+HBM_PER_CHIP = 16 * 1024 ** 3      # v5e
+
+
+def _sds(tree_shapes: PyTree, spec_tree: PyTree, mesh) -> PyTree:
+    def f(s, spec):
+        if s is None:
+            return None
+        sh = NamedSharding(mesh, spec if spec is not None else P())
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+    return jax.tree.map(f, tree_shapes, spec_tree,
+                        is_leaf=lambda x: isinstance(x, (P, type(None))) or hasattr(x, "shape"))
+
+
+def _spec_like(shapes: PyTree, spec: P) -> PyTree:
+    return jax.tree.map(lambda _: spec, shapes)
+
+
+def build_cell(cfg: LMConfig, shape_name: str, mesh, flags: SH.ShardFlags,
+               accum_unroll: int = 1):
+    """-> (fn, arg_sds tuple, rules). fn is the unjitted entry point."""
+    sp = SHAPES[shape_name]
+    mode = "train" if sp.kind == "train" else "decode"
+    rules = SH.make_rules(mesh, mode, flags)
+
+    params_shapes = jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0), cfg))
+    pspecs = SH.param_specs(params_shapes, rules)
+    params_sds = _sds(params_shapes, pspecs, mesh)
+
+    ins = input_specs(cfg, shape_name)
+
+    if sp.kind == "train":
+        specs = lm.group_specs(params_shapes, cfg)
+        mdt = jnp.bfloat16 if getattr(flags, "opt_bf16", False) else jnp.float32
+        step, opt_init = build_train_step(cfg, specs, accum_unroll=accum_unroll,
+                                          opt_moment_dtype=mdt)
+        opt_shapes = jax.eval_shape(opt_init, params_shapes)
+        opt_specs = AdamWState(pspecs, pspecs, P())
+        opt_sds = _sds(opt_shapes, opt_specs, mesh)
+        gm_shapes = jax.eval_shape(lambda: init_group_masks(specs))
+        gm_sds = _sds(gm_shapes, jax.tree.map(lambda _: P(), gm_shapes), mesh)
+        bspecs = SH.batch_specs(ins["batch"], rules)
+        batch_sds = _sds(ins["batch"], bspecs, mesh)
+        return step, (params_sds, opt_sds, gm_sds, batch_sds), rules
+
+    if sp.kind == "prefill":
+        fn = build_prefill(cfg)
+        bspecs = SH.batch_specs(ins["batch"], rules)
+        batch_sds = _sds(ins["batch"], bspecs, mesh)
+        return fn, (params_sds, batch_sds), rules
+
+    # decode
+    fn = build_decode(cfg)
+    cspecs = SH.cache_specs(ins["caches"], rules)
+    cache_sds = _sds(ins["caches"], cspecs, mesh)
+    tok_sds = _sds(ins["token"], SH.batch_specs(ins["token"], rules), mesh)
+    pos_sds = _sds(ins["pos"], SH.batch_specs(ins["pos"], rules), mesh)
+    return fn, (params_sds, cache_sds, tok_sds, pos_sds), rules
+
+
+# ---------------------------------------------------------------------------
+# Cost probes: partial-unroll deltas.
+#
+# XLA's cost model counts each while-loop body once. Compiling the SAME cell
+# with a scan's `unroll` raised from 1 to u makes the counted body contain u
+# copies — the delta isolates exactly (u-1) per-iteration costs (fwd, remat
+# and bwd scans all honor `unroll`; verified in tests). Graphs stay 1-2
+# bodies large regardless of depth, so every probe compiles in seconds.
+# ---------------------------------------------------------------------------
+
+def _smallest_divisor(n: int) -> int:
+    for d in (2, 3, 5, 7):
+        if n % d == 0:
+            return d
+    return n  # prime: full unroll
+
+
+def _structure(cfg: LMConfig, shape_name: str) -> dict:
+    """While-loop structure of one cell (trip counts the cost model misses)."""
+    sp = SHAPES[shape_name]
+
+    def n_chunks(kv_len):
+        if cfg.attn_impl == "chunked" and kv_len > cfg.attn_chunk:
+            return kv_len // cfg.attn_chunk
+        return 1
+
+    if sp.kind == "decode":
+        kv_full = sp.seq_len if cfg.sliding_window is None else min(cfg.sliding_window, sp.seq_len)
+        kv_local = kv_full
+    else:
+        kv_full = kv_local = sp.seq_len
+
+    st: dict = {"kind": sp.kind}
+    if cfg.family == "hybrid":
+        n_super = cfg.num_layers // cfg.hybrid_attn_every
+        st["layer"] = dict(n_inst=n_super, length=cfg.hybrid_attn_every,
+                           u2=_smallest_divisor(cfg.hybrid_attn_every))
+        st["attn"] = dict(counted=n_super, apps_by_nc=[(n_super, n_chunks(kv_full))])
+    elif cfg.family == "ssm" and cfg.ssm_state == 0:           # xLSTM
+        n_g = cfg.num_layers // cfg.xlstm_slstm_every
+        st["layer"] = dict(n_inst=n_g, length=cfg.xlstm_slstm_every - 1,
+                           u2=_smallest_divisor(cfg.xlstm_slstm_every - 1))
+        st["attn"] = None
+    elif cfg.layer_pattern == "local_global":
+        P = cfg.num_layers // 2
+        st["layer"] = dict(n_inst=1, length=P, u2=_smallest_divisor(P))
+        if sp.kind == "decode" and cfg.sliding_window:
+            kv_local = min(cfg.sliding_window, sp.seq_len)
+        st["attn"] = dict(counted=2, apps_by_nc=[(P, n_chunks(kv_local)),
+                                                 (P, n_chunks(kv_full))])
+    else:
+        L = cfg.num_layers
+        st["layer"] = dict(n_inst=1, length=L, u2=_smallest_divisor(L))
+        st["attn"] = dict(counted=1, apps_by_nc=[(L, n_chunks(kv_full))])
+    if st.get("attn") and all(nc == 1 for _, nc in st["attn"]["apps_by_nc"]):
+        st["attn"] = None
+    return st
+
+
+_METRICS = ("flops", "bytes", "coll_operand", "coll_ring")
+
+
+def _probe_one(cfg, shape_name, mesh, flags, accum_unroll=1):
+    fn, args, rules = build_cell(cfg, shape_name, mesh, flags,
+                                 accum_unroll=accum_unroll)
+    with use_rules(rules):
+        compiled = jax.jit(fn).lower(*args).compile()
+    cost = AN.cost_of(compiled)
+    coll = AN.parse_collectives(compiled.as_text())
+    return {"flops": cost["flops"], "bytes": cost["bytes"],
+            "coll_operand": coll["bytes_operand"], "coll_ring": coll["bytes_ring"]}
+
+
+def _slstm_correction(cfg: LMConfig, sp, kind: str) -> float:
+    """Analytic FLOPs for the sLSTM time-recurrence (a seq-length while loop
+    the HLO cost model counts once; error of this correction ≤ 1/seq_len).
+    Decode runs a single step — already exact, no correction."""
+    if kind == "decode" or not (cfg.family == "ssm" and cfg.ssm_state == 0):
+        return 0.0
+    n_groups = cfg.num_layers // cfg.xlstm_slstm_every
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    per_tok = 2.0 * 4 * H * hd * hd            # recurrent gate einsum
+    mult = 3.0 if kind == "train" else 1.0     # fwd + ~2x bwd
+    return mult * n_groups * sp.global_batch * sp.seq_len * per_tok
+
+
+def probe_costs(cfg: LMConfig, shape_name: str, mesh, flags) -> dict:
+    """Per-device roofline inputs via unroll-delta probes:
+
+      base      : everything rolled — every while body counted once
+      layer u2  : layer-scan bodies ×u2 → per-layer cost
+      attn u2   : KV-chunk scan bodies ×2 → per-chunk attention cost
+      accum u2  : (train) microbatch scan ×2 → per-microbatch cost
+
+      total = const + A·[micro + extra_layers·layer + Σ apps·(nc−1)·attn]
+    """
+    sp = SHAPES[shape_name]
+    st = _structure(cfg, shape_name)
+    train = sp.kind == "train"
+    A = max(cfg.grad_accum, 1) if train else 1
+
+    base = _probe_one(cfg, shape_name, mesh, flags)
+
+    lay = st["layer"]
+    u2 = lay["u2"]
+    extra_per_inst = (lay["length"] - 1) if u2 >= lay["length"] else (u2 - 1)
+    scan_u = True if u2 >= lay["length"] else u2
+    f_layer = _probe_one(dataclasses.replace(cfg, scan_unroll=scan_u),
+                         shape_name, mesh, flags)
+    layer_body = {k: (f_layer[k] - base[k]) / (lay["n_inst"] * extra_per_inst)
+                  for k in _METRICS}
+    extra_layers = lay["n_inst"] * (lay["length"] - 1)
+
+    attn_body = {k: 0.0 for k in _METRICS}
+    attn_corr_mult = 0.0
+    if st["attn"] is not None:
+        f_attn = _probe_one(dataclasses.replace(cfg, attn_scan_unroll=2),
+                            shape_name, mesh, flags)
+        attn_body = {k: max(f_attn[k] - base[k], 0.0) / st["attn"]["counted"]
+                     for k in _METRICS}
+        attn_corr_mult = sum(apps * (nc - 1) for apps, nc in st["attn"]["apps_by_nc"])
+
+    out = {}
+    if train:
+        f_acc = _probe_one(cfg, shape_name, mesh, flags, accum_unroll=2)
+        for k in _METRICS:
+            micro = max(f_acc[k] - base[k], 0.0)
+            const = base[k] - micro
+            micro_true = (micro + extra_layers * layer_body[k]
+                          + attn_corr_mult * attn_body[k])
+            out[k] = const + A * micro_true
+    else:
+        for k in _METRICS:
+            out[k] = (base[k] + extra_layers * layer_body[k]
+                      + attn_corr_mult * attn_body[k])
+
+    # sLSTM time recurrence: analytic (state replicated over model axis →
+    # per-device share divides by the batch shards only)
+    data_shards = mesh.shape.get("pod", 1) * mesh.shape["data"]
+    out["flops"] += _slstm_correction(cfg, sp, sp.kind) / data_shards
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             flags: SH.ShardFlags = SH.ShardFlags(), probes: bool = True,
+             verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = registry.config_for(arch, shape_name)
+    sp = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "chips": mesh.size,
+           "flags": dataclasses.asdict(flags), "status": "ok"}
+    t0 = time.time()
+    try:
+        fn, args, rules = build_cell(cfg, shape_name, mesh, flags)
+        donate = {"train": (0, 1), "decode": (1,)}.get(sp.kind, ())
+        with use_rules(rules):
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = AN.memory_of(compiled)
+        coll_full = AN.parse_collectives(compiled.as_text())
+        rec.update({
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+            "memory": mem,
+            "fits_hbm": mem.get("peak_estimate_bytes", 0) < HBM_PER_CHIP,
+            "collectives_in_schedule": coll_full["count_by_op"],
+        })
+        if verbose:
+            print(f"[{arch} × {shape_name} × {rec['mesh']}] compiled "
+                  f"({t_compile:.1f}s); per-device bytes: "
+                  f"args={mem.get('argument_bytes', 0)/2**30:.2f}GiB "
+                  f"out={mem.get('output_bytes', 0)/2**30:.2f}GiB "
+                  f"temp={mem.get('temp_bytes', 0)/2**30:.2f}GiB "
+                  f"fits_16GiB={rec['fits_hbm']}")
+            print(f"  collectives: {coll_full['count_by_op']}")
+        if probes:
+            per_dev = probe_costs(cfg, shape_name, mesh, flags)
+            chips = mesh.size
+            rl = AN.Roofline(chips=chips,
+                             flops=per_dev["flops"] * chips,
+                             bytes=per_dev["bytes"] * chips,
+                             coll_bytes=per_dev["coll_ring"] * chips)
+            mf = AN.model_flops(cfg, sp.kind, sp.seq_len, sp.global_batch)
+            rec.update({
+                "roofline": rl.as_dict(),
+                "collective_bytes_operand_conv": per_dev["coll_operand"] * chips,
+                "model_flops": mf,
+                "useful_compute_ratio": mf / max(rl.flops, 1.0),
+            })
+            if verbose:
+                print(f"  roofline: comp={rl.t_compute*1e3:.2f}ms "
+                      f"mem={rl.t_memory*1e3:.2f}ms coll={rl.t_collective*1e3:.2f}ms "
+                      f"-> {rl.dominant}-bound; model/HLO flops="
+                      f"{rec['useful_compute_ratio']:.2f}")
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[{arch} × {shape_name}] FAILED: {rec['error']}")
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--sp", action="store_true", help="sequence-parallel flag")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--state-shard", action="store_true",
+                    help="shard decode state feature dims over model")
+    ap.add_argument("--opt-bf16", action="store_true",
+                    help="bf16 AdamW moments")
+    ap.add_argument("--moe-manual-tp", action="store_true",
+                    help="MoE combine-before-reduce manual TP")
+    args = ap.parse_args(argv)
+
+    flags = SH.ShardFlags(sp=args.sp, fsdp=not args.no_fsdp,
+                          state_shard=args.state_shard,
+                          moe_manual_tp=args.moe_manual_tp)
+    if args.opt_bf16:
+        object.__setattr__(flags, "opt_bf16", True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    todo = []
+    for arch, shape, skip in registry.cells(include_skips=True):
+        if args.arch and arch != args.arch:
+            continue
+        if args.shape and shape != args.shape:
+            continue
+        for mp in meshes:
+            key = f"{arch}|{shape}|{'2x16x16' if mp else '16x16'}|{flags_key(flags)}"
+            if skip is not None:
+                results[key] = {"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "status": "skipped", "reason": skip}
+                continue
+            if key in results and results[key].get("status") == "ok" and not args.force:
+                continue
+            todo.append((key, arch, shape, mp))
+
+    print(f"{len(todo)} cells to run")
+    for i, (key, arch, shape, mp) in enumerate(todo):
+        print(f"--- [{i+1}/{len(todo)}] {key}")
+        results[key] = run_cell(arch, shape, mp, flags, probes=not args.no_probes)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    err = sum(1 for r in results.values() if r.get("status") == "error")
+    sk = sum(1 for r in results.values() if r.get("status") == "skipped")
+    print(f"done: {ok} ok, {err} error, {sk} skipped -> {args.out}")
+    return 0 if err == 0 else 1
+
+
+def flags_key(flags: SH.ShardFlags) -> str:
+    base = f"fsdp{int(flags.fsdp)}tp{int(flags.tp)}sp{int(flags.sp)}"
+    if flags.state_shard:
+        base += "ss1"
+    if flags.moe_manual_tp:
+        base += "mtp1"
+    if getattr(flags, "opt_bf16", False):
+        base += "ob1"
+    return base
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

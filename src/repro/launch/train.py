@@ -1,0 +1,175 @@
+"""Step builders shared by the dry-run, the real training driver, and
+examples. Pure functions (jitted by the caller with explicit shardings).
+
+The production ``train_step`` integrates HAPM as a first-class feature:
+group masks (tiny ``(num_tiles,)`` arrays) ride in the step inputs and are
+expanded to element masks *inside* the step — mask storage is ~1e-4 of
+parameter storage, and the expand fuses into the weight multiply.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.groups import GroupSpec, apply_group_mask
+from ..core.masks import apply_masks
+from ..models import lm
+from ..models.lm_config import LMConfig
+from ..train import optimizer as OPT
+
+PyTree = Any
+
+
+def expand_group_masks(group_specs: PyTree, gmasks: PyTree) -> PyTree:
+    def f(spec, gm):
+        if spec is None or not isinstance(spec, GroupSpec):
+            return None
+        return spec.expand(gm)
+    return jax.tree.map(f, group_specs, gmasks,
+                        is_leaf=lambda x: x is None or isinstance(x, GroupSpec))
+
+
+def init_group_masks(group_specs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: jnp.ones((s.num_groups,), jnp.float32) if isinstance(s, GroupSpec) else None,
+        group_specs, is_leaf=lambda x: x is None or isinstance(x, GroupSpec))
+
+
+def build_train_step(cfg: LMConfig, group_specs: Optional[PyTree] = None,
+                     lr: float = 3e-4, weight_decay: float = 0.1,
+                     accum_unroll: int = 1, opt_moment_dtype=jnp.float32):
+    """-> (train_step(params, opt_state, gmasks, batch), opt_init)."""
+    opt_init, opt_update = OPT.adamw(weight_decay=weight_decay,
+                                     moment_dtype=opt_moment_dtype)
+    A = max(cfg.grad_accum, 1)
+
+    def mask_params(params, gmasks):
+        def f(spec, p, gm):
+            if spec is None or not isinstance(spec, GroupSpec):
+                return p
+            return apply_group_mask(spec, p, gm)
+        return jax.tree.map(
+            f, group_specs, params, gmasks,
+            is_leaf=lambda x: x is None or isinstance(x, GroupSpec))
+
+    def train_step(params, opt_state, gmasks, batch):
+        mp = mask_params(params, gmasks) if group_specs is not None else params
+
+        def lf(p, b):
+            return lm.loss_fn(p, b, cfg)
+
+        if A == 1:
+            (loss, _), grads = jax.value_and_grad(lf, has_aux=True)(mp, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(A, x.shape[0] // A, *x.shape[1:]), batch)
+
+            def body(carry, mb):
+                acc, l = carry
+                (loss, _), g = jax.value_and_grad(lf, has_aux=True)(mp, mb)
+                return (jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, g),
+                        l + loss), ()
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), mp)
+            (gsum, lsum), _ = jax.lax.scan(body, (zero, 0.0), micro, unroll=accum_unroll)
+            grads = jax.tree.map(lambda g: g / A, gsum)
+            loss = lsum / A
+
+        updates, new_opt = opt_update(grads, opt_state, params, lr)
+        params = OPT.apply_updates(params, updates)
+        if group_specs is not None:
+            params = mask_params(params, gmasks)
+        return params, new_opt, loss
+
+    return train_step, opt_init
+
+
+def build_prefill(cfg: LMConfig):
+    def prefill_fn(params, batch):
+        return lm.prefill(params, batch, cfg)
+    return prefill_fn
+
+
+def build_decode(cfg: LMConfig):
+    def decode_fn(params, caches, token, pos):
+        return lm.decode_step(params, caches, token, pos, cfg)
+    return decode_fn
+
+
+# ---------------------------------------------------------------------------
+# Real training driver (host-scale demo of the production path)
+# ---------------------------------------------------------------------------
+
+def main(argv=None):
+    from ..configs import registry
+    from ..data.synthetic import TokenStream
+    from ..train import checkpoint as CKPT
+
+    ap = argparse.ArgumentParser(description="LM training driver (HAPM-integrated)")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--hapm-sparsity", type=float, default=0.0)
+    ap.add_argument("--hapm-epochs", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    from ..core import HAPMConfig, hapm_init, hapm_epoch_update
+    cfg = registry.config_for(args.arch, smoke=args.smoke)
+    cfg = dataclasses.replace(cfg, grad_accum=1)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M")
+
+    specs = lm.group_specs(params, cfg)
+    train_step, opt_init = build_train_step(cfg, specs, lr=args.lr)
+    step_jit = jax.jit(train_step, donate_argnums=(0, 1))
+    opt_state = opt_init(params)
+
+    hapm_cfg = HAPMConfig(args.hapm_sparsity, args.hapm_epochs)
+    hstate = hapm_init(specs, hapm_cfg)
+    gmasks = jax.tree.map(
+        lambda m: None if m is None else jnp.asarray(m),
+        hstate.group_masks, is_leaf=lambda x: x is None)
+
+    start = 0
+    if args.ckpt_dir and CKPT.latest_step(args.ckpt_dir) is not None:
+        skeleton = {"params": params, "opt": opt_state}
+        tree, meta = CKPT.restore(args.ckpt_dir, skeleton)
+        params, opt_state = tree["params"], tree["opt"]
+        start = meta["step"] + 1
+        print(f"resumed from step {meta['step']}")
+
+    ds = TokenStream(cfg.vocab_size, args.seq)
+    it = ds.batches(args.batch, seed=1)
+    steps_per_epoch = max(args.steps // max(args.hapm_epochs, 1), 1)
+    for step in range(start, args.steps):
+        if args.hapm_sparsity > 0 and step % steps_per_epoch == 0:
+            hstate = hapm_epoch_update(hstate, specs, params, hapm_cfg)
+            gmasks = jax.tree.map(
+                lambda m: None if m is None else jnp.asarray(m),
+                hstate.group_masks, is_leaf=lambda x: x is None)
+            from ..core import hapm_group_sparsity
+            print(f"  [hapm] epoch {hstate.epoch}: group sparsity "
+                  f"{hapm_group_sparsity(hstate):.3f}")
+        params, opt_state, loss = step_jit(params, opt_state, gmasks, next(it))
+        if step % args.log_every == 0:
+            print(f"step {step}: loss={float(loss):.4f}")
+        if args.ckpt_dir and step and step % args.ckpt_every == 0:
+            CKPT.save(args.ckpt_dir, step, {"params": params, "opt": opt_state})
+    print(f"final loss: {float(loss):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: the paper's CNN + the 10 assigned LM architectures."""
+from . import cnn, frontends, hybrid, layers, lm, moe, ssm, transformer, xlstm
+from .lm_config import LMConfig

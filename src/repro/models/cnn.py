@@ -1,0 +1,237 @@
+"""The paper's validation network: a ResNet-type CNN with 21 conv layers
+for 32×32×3 / 10-class classification (He et al. CIFAR ResNet-20 + two 1×1
+projection shortcuts = 21 convs, ≈0.046 GOP/image as in paper §IV-B).
+
+Pure-functional JAX: params/state are nested dicts, conv weights in HWIO
+layout (kx, ky, cin, cout) matching ``core.groups.fpga_conv_groups``.
+Supports quantization-aware training with the paper's Q2.5 (weights) /
+Q3.4 (activations) fixed-point formats, and mask trees from any pruning
+method in :mod:`repro.core`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import quant as Q
+from ..core.groups import fpga_conv_groups
+from ..accel.cycle_model import ConvLayerDims
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    stages: Tuple[int, ...] = (3, 3, 3)
+    widths: Tuple[int, ...] = (16, 32, 64)
+    num_classes: int = 10
+    in_channels: int = 3
+    image_size: int = 32
+    quantized: bool = False            # QAT with Q2.5 / Q3.4
+    bn_momentum: float = 0.9
+    bn_eps: float = 1e-5
+
+
+def _conv_init(key, kx, ky, cin, cout):
+    fan_in = kx * ky * cin
+    return jax.random.normal(key, (kx, ky, cin, cout)) * np.sqrt(2.0 / fan_in)
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _bn_state_init(c):
+    return {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def init(key: jax.Array, cfg: ResNetConfig) -> Tuple[PyTree, PyTree]:
+    """Returns (params, state). state holds BN running stats."""
+    keys = iter(jax.random.split(key, 64))
+    params: dict = {"conv0": {"w": _conv_init(next(keys), 3, 3, cfg.in_channels, cfg.widths[0])},
+                    "bn0": _bn_init(cfg.widths[0])}
+    state: dict = {"bn0": _bn_state_init(cfg.widths[0])}
+    cin = cfg.widths[0]
+    for si, (n_blocks, width) in enumerate(zip(cfg.stages, cfg.widths)):
+        for bi in range(n_blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            name = f"s{si}b{bi}"
+            blk = {
+                "conv1": {"w": _conv_init(next(keys), 3, 3, cin, width)},
+                "bn1": _bn_init(width),
+                "conv2": {"w": _conv_init(next(keys), 3, 3, width, width)},
+                "bn2": _bn_init(width),
+            }
+            st = {"bn1": _bn_state_init(width), "bn2": _bn_state_init(width)}
+            if stride != 1 or cin != width:
+                blk["proj"] = {"w": _conv_init(next(keys), 1, 1, cin, width)}
+                blk["bnp"] = _bn_init(width)
+                st["bnp"] = _bn_state_init(width)
+            params[name] = blk
+            state[name] = st
+            cin = width
+    params["fc"] = {
+        "w": jax.random.normal(next(keys), (cin, cfg.num_classes)) * np.sqrt(1.0 / cin),
+        "b": jnp.zeros((cfg.num_classes,)),
+    }
+    return params, state
+
+
+def _maybe_qw(w, cfg: ResNetConfig):
+    return Q.quantize(w, Q.Q2_5) if cfg.quantized else w
+
+
+def _maybe_qa(x, cfg: ResNetConfig):
+    return Q.quantize(x, Q.Q3_4) if cfg.quantized else x
+
+
+def _conv(x, w, stride):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _bn(x, p, s, train: bool, cfg: ResNetConfig):
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_s = {
+            "mean": cfg.bn_momentum * s["mean"] + (1 - cfg.bn_momentum) * mean,
+            "var": cfg.bn_momentum * s["var"] + (1 - cfg.bn_momentum) * var,
+        }
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    y = (x - mean) * jax.lax.rsqrt(var + cfg.bn_eps) * p["scale"] + p["bias"]
+    return y, new_s
+
+
+def apply(
+    params: PyTree,
+    state: PyTree,
+    x: jnp.ndarray,
+    cfg: ResNetConfig,
+    train: bool = False,
+) -> Tuple[jnp.ndarray, PyTree]:
+    """Forward pass. ``x``: (B, H, W, C) in [0, 1]. Returns (logits, new_state).
+
+    Pruning masks are applied to *params* beforehand (``core.apply_masks``),
+    keeping this function mask-agnostic.
+    """
+    new_state: dict = {}
+    h = _conv(x, _maybe_qw(params["conv0"]["w"], cfg), 1)
+    h, new_state["bn0"] = _bn(h, params["bn0"], state["bn0"], train, cfg)
+    h = _maybe_qa(jax.nn.relu(h), cfg)
+    for si, n_blocks in enumerate(cfg.stages):
+        for bi in range(n_blocks):
+            name = f"s{si}b{bi}"
+            blk, st = params[name], state[name]
+            stride = 2 if (si > 0 and bi == 0) else 1
+            ns: dict = {}
+            y = _conv(h, _maybe_qw(blk["conv1"]["w"], cfg), stride)
+            y, ns["bn1"] = _bn(y, blk["bn1"], st["bn1"], train, cfg)
+            y = _maybe_qa(jax.nn.relu(y), cfg)
+            y = _conv(y, _maybe_qw(blk["conv2"]["w"], cfg), 1)
+            y, ns["bn2"] = _bn(y, blk["bn2"], st["bn2"], train, cfg)
+            if "proj" in blk:
+                sc = _conv(h, _maybe_qw(blk["proj"]["w"], cfg), stride)
+                sc, ns["bnp"] = _bn(sc, blk["bnp"], st["bnp"], train, cfg)
+            else:
+                sc = h
+            h = _maybe_qa(jax.nn.relu(y + sc), cfg)
+            new_state[name] = ns
+    pooled = jnp.mean(h, axis=(1, 2))
+    logits = pooled @ params["fc"]["w"] + params["fc"]["b"]
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Pruning / accelerator integration
+# ---------------------------------------------------------------------------
+
+def is_conv_weight(path, leaf) -> bool:
+    """Prunable = 4-D conv kernels (the paper prunes conv layers)."""
+    return hasattr(leaf, "ndim") and leaf.ndim == 4
+
+
+def conv_group_specs(params: PyTree, n_cu: int) -> PyTree:
+    """GroupSpec tree for HAPM over every conv weight (None elsewhere)."""
+    def f(path, leaf):
+        if is_conv_weight(path, leaf):
+            return fpga_conv_groups(leaf.shape, n_cu)
+        return None
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def conv_layer_order(cfg: ResNetConfig):
+    """Execution-order list of (param-path, stride, input_feature_size) for
+    every conv layer (21 for the default config)."""
+    order = [(("conv0", "w"), 1, cfg.image_size)]
+    feat = cfg.image_size
+    cin = cfg.widths[0]
+    for si, n_blocks in enumerate(cfg.stages):
+        for bi in range(n_blocks):
+            name = f"s{si}b{bi}"
+            stride = 2 if (si > 0 and bi == 0) else 1
+            width = cfg.widths[si]
+            out = -(-feat // stride)
+            order.append(((name, "conv1", "w"), stride, feat))
+            order.append(((name, "conv2", "w"), 1, out))
+            if stride != 1 or cin != width:
+                order.append(((name, "proj", "w"), stride, feat))
+            feat = out
+            cin = width
+    return order
+
+
+def layer_dims(cfg: ResNetConfig, params: PyTree):
+    """ConvLayerDims (padded sizes) per conv layer, execution order —
+    feeds the Eq.-3 cycle model."""
+    dims = []
+    for path, stride, feat in conv_layer_order(cfg):
+        node = params
+        for k in path:
+            node = node[k]
+        kx, ky, cin, cout = node.shape
+        out = -(-feat // stride)           # SAME conv output
+        padded = (out - 1) * stride + kx   # input size incl. padding (Alg. 1 note)
+        dims.append((path, ConvLayerDims(
+            n_ix=max(padded, feat), n_iy=max(padded, feat),
+            n_if=cin, n_of=cout, kx=kx, ky=ky, sx=stride, sy=stride)))
+    return dims
+
+
+def network_ops(cfg: ResNetConfig, params: PyTree) -> int:
+    return sum(d.ops for _, d in layer_dims(cfg, params))
+
+
+def fold_batchnorm(params: PyTree, state: PyTree, cfg: ResNetConfig) -> PyTree:
+    """Inference-time BN folding: w' = w·γ/√(σ²+ε) (per cout), b' = β − μ·γ/√(σ²+ε).
+
+    Scaling per output channel preserves zero groups, so HAPM masks survive
+    folding unchanged — this is what the accelerator executes.
+    """
+    folded = {}
+
+    def fold_one(w, bnp, bns):
+        g = bnp["scale"] * jax.lax.rsqrt(bns["var"] + cfg.bn_eps)
+        return w * g[None, None, None, :], bnp["bias"] - bns["mean"] * g
+
+    folded["conv0"] = dict(zip(("w", "b"), fold_one(params["conv0"]["w"], params["bn0"], state["bn0"])))
+    for si, n_blocks in enumerate(cfg.stages):
+        for bi in range(n_blocks):
+            name = f"s{si}b{bi}"
+            blk, st = params[name], state[name]
+            out = {}
+            out["conv1"] = dict(zip(("w", "b"), fold_one(blk["conv1"]["w"], blk["bn1"], st["bn1"])))
+            out["conv2"] = dict(zip(("w", "b"), fold_one(blk["conv2"]["w"], blk["bn2"], st["bn2"])))
+            if "proj" in blk:
+                out["proj"] = dict(zip(("w", "b"), fold_one(blk["proj"]["w"], blk["bnp"], st["bnp"])))
+            folded[name] = out
+    folded["fc"] = dict(params["fc"])
+    return folded

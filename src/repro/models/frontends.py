@@ -1,0 +1,39 @@
+"""Modality frontend STUBS (per assignment: the backbone is the deliverable;
+``input_specs()`` feeds precomputed frame/patch embeddings).
+
+These stubs exist so the examples can exercise the full input path: a frozen
+random patch/frame projector with the right output geometry. They are NOT
+trained vision/audio towers and are documented as such (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .lm_config import LMConfig
+
+
+def siglip_stub_embed(key, images: jnp.ndarray, cfg: LMConfig) -> jnp.ndarray:
+    """(B, H, W, 3) -> (B, num_prefix_tokens, d_model): patchify + frozen
+    random projection (SigLIP-so400m geometry: 16x16 grid = 256 tokens)."""
+    B = images.shape[0]
+    g = max(int(np.ceil(np.sqrt(cfg.num_prefix_tokens))), 1)
+    patch = max(images.shape[1] // g, 1)
+    x = images[:, :g * patch, :g * patch]
+    x = x.reshape(B, g, patch, g, patch, 3).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(B, g * g, patch * patch * 3)
+    x = x[:, :cfg.num_prefix_tokens]
+    if x.shape[1] < cfg.num_prefix_tokens:
+        x = jnp.pad(x, ((0, 0), (0, cfg.num_prefix_tokens - x.shape[1]), (0, 0)))
+    w = jax.random.normal(key, (x.shape[-1], cfg.d_model)) / np.sqrt(x.shape[-1])
+    return (x @ w).astype(jnp.dtype(cfg.dtype))
+
+
+def encodec_stub_embed(key, codes: jnp.ndarray, cfg: LMConfig) -> jnp.ndarray:
+    """(B, S, n_codebooks) EnCodec token codes -> (B, S, d_model): summed
+    frozen codebook embeddings (MusicGen's delay-pattern input, stubbed)."""
+    B, S, nq = codes.shape
+    tables = jax.random.normal(key, (nq, 2048, cfg.d_model)) * 0.02
+    embs = sum(jnp.take(tables[q], codes[:, :, q], axis=0) for q in range(nq))
+    return embs.astype(jnp.dtype(cfg.dtype))

@@ -1,0 +1,220 @@
+"""Zamba-2-style hybrid: Mamba-2 backbone with one *shared* attention+FFN
+block applied after every ``hybrid_attn_every`` Mamba layers (one weight
+set, reused — Zamba's parameter-sharing trick), plus the xLSTM stack
+assembly (groups of mLSTM blocks with a sLSTM block every
+``xlstm_slstm_every`` layers).
+
+Both are organized as: python loop over super-blocks, ``lax.scan`` over the
+homogeneous stack inside — HLO stays O(super-blocks), caches stay
+per-application.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.api import constrain
+from .lm_config import LMConfig
+from . import layers as L
+from . import ssm as SSM
+from . import xlstm as XL
+from .transformer import block_init, block_apply, stack_init, _dtype, _remat, unembed
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# zamba2: hybrid mamba + shared attention
+# ---------------------------------------------------------------------------
+
+def hybrid_layout(cfg: LMConfig) -> Tuple[int, int, int]:
+    """(n_super, mamba_per_super, n_tail). Shared attn applied n_super times."""
+    every = cfg.hybrid_attn_every
+    n_super = cfg.num_layers // every
+    n_tail = cfg.num_layers - n_super * every
+    return n_super, every, n_tail
+
+
+def hybrid_init(key, cfg: LMConfig) -> PyTree:
+    dt = _dtype(cfg)
+    n_super, every, n_tail = hybrid_layout(cfg)
+    ke, km, ka, kt = jax.random.split(key, 4)
+    params = {
+        "embed": (jax.random.normal(ke, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        # (n_super, every, ...) stacked mamba layers
+        "mamba": jax.vmap(lambda k: stack_init(SSM.mamba_init, k, every, cfg, dt))(
+            jax.random.split(km, n_super)),
+        "shared_attn": block_init(ka, cfg, dt),   # ONE weight set (shared)
+    }
+    if n_tail:
+        params["mamba_tail"] = stack_init(SSM.mamba_init, kt, n_tail, cfg, dt)
+    return params
+
+
+def hybrid_forward(
+    params: PyTree,
+    batch: dict,
+    cfg: LMConfig,
+    caches: Optional[PyTree] = None,
+    positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray]:
+    dt = _dtype(cfg)
+    n_super, every, n_tail = hybrid_layout(cfg)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = constrain(x, "batch", "seq", "embed")
+
+    decode = caches is not None
+    new_caches: dict = {"mamba": [], "attn": [], "mamba_tail": None} if decode else None
+
+    def mamba_body(x, inp):
+        pl, st = inp
+        out, nst = SSM.mamba_apply(pl, x, cfg, state=st)
+        return x + out, nst
+
+    body = _remat(mamba_body, cfg)
+
+    for si in range(n_super):
+        stack = jax.tree.map(lambda a: a[si], params["mamba"])
+        st = jax.tree.map(lambda a: a[si], caches["mamba"]) if decode else None
+        x, nst = jax.lax.scan(body, x, (stack, st), unroll=cfg.scan_unroll)
+        ac = jax.tree.map(lambda a: a[si], caches["attn"]) if decode else None
+        x, nac, _ = block_apply(params["shared_attn"], x, cfg, positions,
+                                cfg.sliding_window, ac, 0)
+        if decode:
+            new_caches["mamba"].append(nst)
+            new_caches["attn"].append(nac)
+
+    if n_tail:
+        st = caches["mamba_tail"] if decode else None
+        # tail counted exactly whenever cost-probing (any non-default unroll)
+        tail_unroll = n_tail if (cfg.scan_unroll is True or cfg.scan_unroll != 1) else 1
+        x, nst = jax.lax.scan(body, x, (params["mamba_tail"], st), unroll=tail_unroll)
+        if decode:
+            new_caches["mamba_tail"] = nst
+
+    if decode:
+        new_caches["mamba"] = jax.tree.map(lambda *a: jnp.stack(a), *new_caches["mamba"])
+        new_caches["attn"] = jax.tree.map(lambda *a: jnp.stack(a), *new_caches["attn"])
+
+    x = L.rmsnorm(x, params["final_norm"])
+    return unembed(params, x, cfg), new_caches, jnp.zeros((), jnp.float32)
+
+
+def hybrid_init_caches(cfg: LMConfig, batch: int, max_len: int) -> PyTree:
+    dt = _dtype(cfg)
+    n_super, every, n_tail = hybrid_layout(cfg)
+    Kv, hd = cfg.num_kv_heads, cfg.head_dim
+    attn_len = max_len if cfg.sliding_window is None else min(cfg.sliding_window, max_len)
+
+    def mamba_stack(n1, n2):
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        return {
+            "ssm": jnp.zeros((n1, n2, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+            "conv": jnp.zeros((n1, n2, batch, cfg.ssm_conv - 1, conv_dim), dt),
+        }
+
+    caches = {
+        "mamba": mamba_stack(n_super, every),
+        "attn": {
+            "k": jnp.zeros((n_super, batch, attn_len, Kv, hd), dt),
+            "v": jnp.zeros((n_super, batch, attn_len, Kv, hd), dt),
+            "pos": jnp.full((n_super, batch, attn_len), -1, jnp.int32),
+        },
+        "mamba_tail": None,
+    }
+    if n_tail:
+        st = mamba_stack(1, n_tail)
+        caches["mamba_tail"] = jax.tree.map(lambda a: a[0], st)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# xLSTM stack
+# ---------------------------------------------------------------------------
+
+def xlstm_layout(cfg: LMConfig) -> Tuple[int, int]:
+    """(n_groups, mlstm_per_group): groups of (every-1) mLSTM + 1 sLSTM."""
+    every = cfg.xlstm_slstm_every
+    assert cfg.num_layers % every == 0, "xlstm: num_layers % slstm_every != 0"
+    return cfg.num_layers // every, every - 1
+
+
+def xlstm_init(key, cfg: LMConfig) -> PyTree:
+    dt = _dtype(cfg)
+    n_groups, m_per = xlstm_layout(cfg)
+    ke, km, ks = jax.random.split(key, 3)
+    return {
+        "embed": (jax.random.normal(ke, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "mlstm": jax.vmap(lambda k: stack_init(XL.mlstm_block_init, k, m_per, cfg, dt))(
+            jax.random.split(km, n_groups)),
+        "slstm": stack_init(XL.slstm_block_init, ks, n_groups, cfg, dt),
+    }
+
+
+def xlstm_forward(
+    params: PyTree,
+    batch: dict,
+    cfg: LMConfig,
+    caches: Optional[PyTree] = None,
+    positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray]:
+    n_groups, m_per = xlstm_layout(cfg)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = constrain(x, "batch", "seq", "embed")
+    decode = caches is not None
+    new_caches = {"mlstm": [], "slstm": []} if decode else None
+
+    def m_body(x, inp):
+        pl, st = inp
+        out, nst = XL.mlstm_block_apply(pl, x, cfg, state=st)
+        return x + out, nst
+
+    body = _remat(m_body, cfg)
+
+    for gi in range(n_groups):
+        stack = jax.tree.map(lambda a: a[gi], params["mlstm"])
+        st = jax.tree.map(lambda a: a[gi], caches["mlstm"]) if decode else None
+        x, nst = jax.lax.scan(body, x, (stack, st), unroll=cfg.scan_unroll)
+        sp = jax.tree.map(lambda a: a[gi], params["slstm"])
+        sc = jax.tree.map(lambda a: a[gi], caches["slstm"]) if decode else None
+        out, nsc = XL.slstm_block_apply(sp, x, cfg, state=sc)
+        x = x + out
+        if decode:
+            new_caches["mlstm"].append(nst)
+            new_caches["slstm"].append(nsc)
+
+    if decode:
+        new_caches = {
+            "mlstm": jax.tree.map(lambda *a: jnp.stack(a), *new_caches["mlstm"]),
+            "slstm": jax.tree.map(lambda *a: jnp.stack(a), *new_caches["slstm"]),
+        }
+
+    x = L.rmsnorm(x, params["final_norm"])
+    return unembed(params, x, cfg), new_caches, jnp.zeros((), jnp.float32)
+
+
+def xlstm_init_caches(cfg: LMConfig, batch: int, max_len: int) -> PyTree:
+    n_groups, m_per = xlstm_layout(cfg)
+    dt = _dtype(cfg)
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    hd_m = di // H
+    hd_s = cfg.d_model // H
+    return {
+        "mlstm": {
+            "C": jnp.zeros((n_groups, m_per, batch, H, hd_m, hd_m), jnp.float32),
+            "n": jnp.zeros((n_groups, m_per, batch, H, hd_m), jnp.float32),
+            "m": jnp.zeros((n_groups, m_per, batch, H), jnp.float32),
+            "conv": jnp.zeros((n_groups, m_per, batch, 3, di), dt),
+        },
+        "slstm": {k: jnp.zeros((n_groups, batch, H, hd_s), jnp.float32)
+                  for k in ("c", "n", "h", "m")},
+    }

@@ -1,0 +1,254 @@
+"""Transformer primitives shared by every assigned LM architecture.
+
+Functional style: ``*_init(key, cfg) -> params``, ``*_apply(params, x, ...)``.
+All matmul weights are 2-D ``(in, out)`` (or stacked ``(L, in, out)``) so
+``core.tpu_tile_groups`` can treat any of them as HAPM tile groups.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.api import constrain
+from .lm_config import LMConfig
+
+NEG_INF = -1e30
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6, plus_one: bool = True) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (x * scale).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S). NeoX-style."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = (theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (..., S, 1, half)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + all assigned flavors) with optional KV cache
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: LMConfig, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    D, H, Kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], D, H * hd, dtype),
+        "wk": dense_init(ks[1], D, Kv * hd, dtype),
+        "wv": dense_init(ks[2], D, Kv * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, D, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _gqa_scores(q, k, softcap):
+    """q: (B,Sq,H,hd) k: (B,Sk,Kv,hd) -> (B,Kv,Hq,Sq,Sk), f32."""
+    B, Sq, H, hd = q.shape
+    Kv = k.shape[2]
+    q = q.reshape(B, Sq, Kv, H // Kv, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32)
+    s = s / np.sqrt(hd)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def _gqa_out(probs, v):
+    """probs: (B,Kv,Hq,Sq,Sk) v: (B,Sk,Kv,hd) -> (B,Sq,H*hd)."""
+    B, Kv, Hq, Sq, Sk = probs.shape
+    o = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+    return o.reshape(B, Sq, Kv * Hq * v.shape[-1])
+
+
+def _attn_mask(q_pos, k_pos, window, prefix_len):
+    """(B,1,1,Sq,Sk) bool. -1 cache slots invalid; causal; optional sliding
+    window; optional bidirectional prefix (vlm)."""
+    qp = q_pos[:, None, None, :, None]
+    kp = k_pos[:, None, None, None, :]
+    mask = (kp <= qp) & (kp >= 0)
+    if window is not None:
+        mask &= (qp - kp) < window
+    if prefix_len:
+        mask |= (qp < prefix_len) & (kp < prefix_len) & (kp >= 0)
+    return mask
+
+
+def attention_core(
+    q: jnp.ndarray,               # (B,Sq,H,hd), RoPE applied
+    k: jnp.ndarray,               # (B,Sk,Kv,hd), RoPE applied
+    v: jnp.ndarray,               # (B,Sk,Kv,hd)
+    q_pos: jnp.ndarray,           # (B,Sq) int32
+    k_pos: jnp.ndarray,           # (B,Sk) int32; -1 marks invalid cache slots
+    window: Optional[int],
+    softcap: Optional[float],
+    prefix_len: int = 0,
+) -> jnp.ndarray:
+    s = _gqa_scores(q, k, softcap)                   # (B,Kv,Hq,Sq,Sk)
+    s = jnp.where(_attn_mask(q_pos, k_pos, window, prefix_len), s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v)
+
+
+def attention_core_chunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    k_pos: jnp.ndarray,
+    window: Optional[int],
+    softcap: Optional[float],
+    prefix_len: int = 0,
+    chunk: int = 1024,
+    unroll: int = 1,
+) -> jnp.ndarray:
+    """Flash-style online-softmax attention: lax.scan over KV chunks with
+    running (max, denom, acc). Peak score memory O(Sq·chunk) instead of
+    O(Sq·Sk) — required for the 32k/500k shapes; the rematerialized body is
+    the memory-optimal bwd (recompute per chunk). f32 running statistics."""
+    B, Sq, H, hd = q.shape
+    Sk, Kv = k.shape[1], k.shape[2]
+    if Sk % chunk:
+        chunk = Sk  # fallback (small/odd shapes)
+    nc = Sk // chunk
+    Hq = H // Kv
+    qh = jnp.transpose(q.reshape(B, Sq, Kv, Hq, hd), (0, 2, 3, 1, 4))  # (B,Kv,Hq,Sq,hd)
+    qh = (qh / np.sqrt(hd)).astype(jnp.float32)
+
+    kc = jnp.moveaxis(k.reshape(B, nc, chunk, Kv, hd), 1, 0)     # (nc,B,ck,Kv,hd)
+    vc = jnp.moveaxis(v.reshape(B, nc, chunk, Kv, hd), 1, 0)
+    kpc = jnp.moveaxis(k_pos.reshape(B, nc, chunk), 1, 0)        # (nc,B,ck)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kci, vci, kpi = inp
+        s = jnp.einsum("bkgqh,bskh->bkgqs", qh, kci.astype(jnp.float32))
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = _attn_mask(q_pos, kpi, window, prefix_len)
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - safe[..., None])                          # masked -> 0
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - safe), 0.0)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p, vci.astype(jnp.float32))
+        return (m_new, l, acc), ()
+
+    init = (jnp.full((B, Kv, Hq, Sq), -jnp.inf, jnp.float32),
+            jnp.zeros((B, Kv, Hq, Sq), jnp.float32),
+            jnp.zeros((B, Kv, Hq, Sq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), init, (kc, vc, kpc),
+                                  unroll=unroll)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, Sq, H * hd)
+    return out.astype(q.dtype)
+
+
+def attn_apply(
+    p: dict,
+    x: jnp.ndarray,               # (B,S,D)
+    cfg: LMConfig,
+    positions: jnp.ndarray,       # (B,S)
+    window: Optional[int] = None,
+    cache: Optional[dict] = None, # {"k","v": (B,W,Kv,hd), "pos": (B,W)} ring buffer
+    prefix_len: int = 0,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    B, S, D = x.shape
+    H, Kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, Kv, hd)
+    v = (x @ p["wv"]).reshape(B, S, Kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", None, "heads", None)  # heads-sharded inside attn
+
+    def core(qq, kk, vv, kp):
+        if cfg.attn_impl == "chunked" and kk.shape[1] > cfg.attn_chunk:
+            return attention_core_chunked(qq, kk, vv, positions, kp, window,
+                                          cfg.attn_softcap, prefix_len,
+                                          chunk=cfg.attn_chunk,
+                                          unroll=cfg.attn_scan_unroll)
+        return attention_core(qq, kk, vv, positions, kp, window,
+                              cfg.attn_softcap, prefix_len)
+
+    if cache is None:
+        o = core(q, k, v, positions)
+        new_cache = None
+    else:
+        # ring-buffer write at slot = pos % W (W == allocated cache length)
+        W = cache["k"].shape[1]
+        slots = positions % W                                     # (B,S)
+        bidx = jnp.arange(B)[:, None]
+        ck = cache["k"].at[bidx, slots].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, slots].set(v.astype(cache["v"].dtype))
+        cpos = cache["pos"].at[bidx, slots].set(positions)
+        o = core(q, ck, cv, cpos)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+    out = o @ p["wo"]
+    return constrain(out, "batch", "seq", "embed"), new_cache
+
+
+def attn_cache_init(cfg: LMConfig, batch: int, length: int, dtype) -> dict:
+    Kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, length, Kv, hd), dtype),
+        "v": jnp.zeros((batch, length, Kv, hd), dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# FFN (GLU family)
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, cfg: LMConfig, dtype, d_ff: Optional[int] = None) -> dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_type in ("swiglu", "geglu"):
+        return {
+            "wi": dense_init(ks[0], D, F, dtype),
+            "wg": dense_init(ks[1], D, F, dtype),
+            "wo": dense_init(ks[2], F, D, dtype),
+        }
+    return {"wi": dense_init(ks[0], D, F, dtype), "wo": dense_init(ks[2], F, D, dtype)}
+
+
+def ffn_apply(p: dict, x: jnp.ndarray, cfg: LMConfig) -> jnp.ndarray:
+    if cfg.ffn_type == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    elif cfg.ffn_type == "geglu":
+        h = jax.nn.gelu(x @ p["wg"], approximate=True) * (x @ p["wi"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"], approximate=True)
+    h = constrain(h, "batch", "seq", "ffn")
+    return constrain(h @ p["wo"], "batch", "seq", "embed")

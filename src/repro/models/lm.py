@@ -1,0 +1,123 @@
+"""Unified LM front door: family dispatch, loss, prune-spec derivation,
+and the three lowered entry points (train_step body / prefill / decode).
+
+Every assigned architecture flows through these five functions:
+
+    init(key, cfg)                      -> params
+    forward(params, batch, cfg, ...)    -> (logits, caches', aux)
+    loss_fn(params, batch, cfg)         -> (loss, metrics)
+    init_caches(cfg, batch, max_len)    -> caches
+    group_specs(params, cfg)            -> HAPM tile GroupSpecs (None elsewhere)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.groups import tpu_tile_groups
+from .lm_config import LMConfig
+from . import transformer as TF
+from . import hybrid as HY
+
+PyTree = Any
+
+
+def init(key, cfg: LMConfig) -> PyTree:
+    if cfg.family == "hybrid":
+        return HY.hybrid_init(key, cfg)
+    if cfg.family == "ssm" and cfg.ssm_state == 0:   # xLSTM
+        return HY.xlstm_init(key, cfg)
+    if cfg.family == "ssm":                           # pure mamba (not in pool, but supported)
+        return HY.hybrid_init(key, cfg)
+    return TF.init(key, cfg)
+
+
+def forward(params, batch, cfg: LMConfig, caches=None, positions=None):
+    if cfg.family == "hybrid" or (cfg.family == "ssm" and cfg.ssm_state > 0):
+        return HY.hybrid_forward(params, batch, cfg, caches, positions)
+    if cfg.family == "ssm":
+        return HY.xlstm_forward(params, batch, cfg, caches, positions)
+    return TF.forward(params, batch, cfg, caches, positions)
+
+
+def init_caches(cfg: LMConfig, batch: int, max_len: int):
+    if cfg.family == "hybrid" or (cfg.family == "ssm" and cfg.ssm_state > 0):
+        return HY.hybrid_init_caches(cfg, batch, max_len)
+    if cfg.family == "ssm":
+        return HY.xlstm_init_caches(cfg, batch, max_len)
+    return TF.init_caches(cfg, batch, max_len)
+
+
+def loss_fn(params, batch, cfg: LMConfig, aux_weight: float = 0.01):
+    """Next-token cross entropy. ``batch["targets"]`` aligned with logits;
+    positions with target < 0 are masked (vlm prefix, padding)."""
+    logits, _, aux = forward(params, batch, cfg)
+    targets = batch["targets"]
+    if logits.shape[1] != targets.shape[1]:   # vlm: logits cover prefix+text
+        logits = logits[:, -targets.shape[1]:]
+    mask = (targets >= 0).astype(jnp.float32)
+    t = jnp.maximum(targets, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, t[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    metrics = {"nll": loss, "aux": aux, "tokens": jnp.sum(mask)}
+    return loss + aux_weight * aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving entry points (lowered by the dry-run for decode/prefill shapes)
+# ---------------------------------------------------------------------------
+
+def prefill(params, batch, cfg: LMConfig, max_len: Optional[int] = None):
+    """Populate caches for `batch["tokens"]` ((B,S)); returns (last_logits, caches)."""
+    tokens = batch.get("tokens")
+    B = (tokens if tokens is not None else batch["embeds"]).shape[0]
+    S = (tokens.shape[1] if tokens is not None else batch["embeds"].shape[1])
+    if batch.get("embeds") is not None and tokens is not None:
+        S = S + batch["embeds"].shape[1]
+    caches = init_caches(cfg, B, max_len or S)
+    logits, caches, _ = forward(params, batch, cfg, caches=caches)
+    return logits[:, -1], caches
+
+
+def decode_step(params, caches, token, pos, cfg: LMConfig):
+    """One token step. token: (B,) int32; pos: (B,) int32 absolute position.
+    Returns (logits (B,V), caches')."""
+    batch = {"tokens": token[:, None]}
+    logits, caches, _ = forward(params, batch, cfg, caches=caches,
+                                positions=pos[:, None])
+    return logits[:, -1], caches
+
+
+# ---------------------------------------------------------------------------
+# HAPM integration: tile groups over every hot matmul weight
+# ---------------------------------------------------------------------------
+
+_PRUNABLE = {"wq", "wk", "wv", "wo", "wi", "wg", "up", "down", "in_proj",
+             "bc_proj", "out_proj", "w"}
+_EXCLUDE_PATH = {"embed", "head", "router", "conv_w", "r"}
+
+
+def prunable(path, leaf) -> bool:
+    keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    if any(k in _EXCLUDE_PATH for k in keys if k):
+        return False
+    last = keys[-1] if keys else None
+    return last in _PRUNABLE and hasattr(leaf, "ndim") and leaf.ndim >= 2
+
+
+def group_specs(params: PyTree, cfg: LMConfig) -> PyTree:
+    """TPU tile GroupSpecs (cfg.block_size) for every prunable weight."""
+    def f(path, leaf):
+        if prunable(path, leaf):
+            return tpu_tile_groups(leaf.shape, cfg.block_size)
+        return None
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def model_flops_per_token(cfg: LMConfig) -> float:
+    """6·N (train) model-FLOPs/token with N = active params (MoE-aware)."""
+    return 6.0 * cfg.active_param_count()

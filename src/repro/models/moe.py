@@ -1,0 +1,247 @@
+"""Top-k routed MoE FFN (Mixtral / Granite style) with capacity-based
+dispatch.
+
+Dispatch is *shard-local*: the gather/scatter that routes tokens to expert
+buffers runs inside ``jax.shard_map``, manual over the batch axes
+(``pod``/``data``) and auto over ``model``. No data-dependent communication
+ever crosses batch shards — only expert weights move: they are stored
+2-D-sharded (d_model over ``data`` — FSDP; d_ff over ``model`` — TP) and
+all-gathered over ``data`` per layer inside the body, Megatron-style TP
+handling the ``model`` axis automatically. A pure expert-parallel split is
+impossible on the assigned meshes (8 or 40 experts cannot divide model=16);
+TP-inside-expert is the EP layout of record (DESIGN.md §6).
+
+Without installed sharding rules the same local function runs directly
+(unit tests / single host).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..dist.api import current_rules
+from .lm_config import LMConfig
+from .layers import dense_init
+
+
+def moe_init(key, cfg: LMConfig, dtype) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / np.sqrt(D)
+    return {
+        "router": dense_init(ks[0], D, E, jnp.float32),
+        "wi": (jax.random.normal(ks[1], (E, D, F)) * scale).astype(dtype),
+        "wg": (jax.random.normal(ks[2], (E, D, F)) * scale).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (E, F, D)) / np.sqrt(F)).astype(dtype),
+    }
+
+
+def _capacity(tokens: int, cfg: LMConfig) -> int:
+    c = int(np.ceil(cfg.num_experts_per_tok * tokens * cfg.capacity_factor / cfg.num_experts))
+    return max(8, -(-c // 8) * 8)  # pad to a lane-friendly multiple
+
+
+def _moe_local(x: jnp.ndarray, p: dict, cfg: LMConfig, capacity: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (T, D) local tokens; p holds *full* (gathered) weights.
+    Returns (out (T, D), aux load-balance loss scalar)."""
+    T, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    logits = x.astype(jnp.float32) @ p["router"]                   # (T,E)
+    gate_vals, eidx = jax.lax.top_k(logits, K)                     # (T,K)
+    gates = jax.nn.softmax(gate_vals, axis=-1)                     # renorm over chosen (Mixtral)
+
+    # load-balance aux (Switch eq. 4): E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.float32)            # (T,K,E)
+    f_e = jnp.mean(jnp.sum(onehot, axis=1), axis=0)
+    aux = E * jnp.sum(f_e * jnp.mean(probs, axis=0))
+
+    # rank of each (token, slot) within its expert, token-major priority
+    oh = onehot.reshape(T * K, E)
+    ranks = jnp.cumsum(oh, axis=0) - oh
+    rank = jnp.sum(ranks * oh, axis=-1).astype(jnp.int32)          # (T*K,)
+    flat_e = eidx.reshape(T * K)
+    keep = rank < capacity
+    slot = jnp.where(keep, flat_e * capacity + rank, E * capacity)  # OOB -> dropped
+
+    tok_of = jnp.arange(T * K) // K
+    buf = jnp.zeros((E * capacity, D), x.dtype)
+    buf = buf.at[slot].set(x[tok_of], mode="drop")
+    expert_in = buf.reshape(E, capacity, D)
+
+    h = jnp.einsum("ecd,edf->ecf", expert_in, p["wi"])
+    g = jnp.einsum("ecd,edf->ecf", expert_in, p["wg"])
+    h = jax.nn.silu(g) * h
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"]).reshape(E * capacity, D)
+
+    back = jnp.take(y, jnp.minimum(slot, E * capacity - 1), axis=0)
+    back = back * keep[:, None].astype(y.dtype)
+    back = back * gates.reshape(T * K, 1).astype(y.dtype)
+    out = jnp.sum(back.reshape(T, K, D), axis=1)
+    return out, aux
+
+
+def _moe_apply_manual_tp(p, x, cfg: LMConfig, rules):
+    """Manual over (batch axes + model): dispatch local, expert FFN on local
+    d_ff shards, single f32 psum after combine (combine-before-reduce)."""
+    B, S, D = x.shape
+    mesh = rules.mesh
+    model_axis = rules.rules["ffn"]
+    batch_axes = rules.rules.get("batch")
+    bset = set((batch_axes,) if isinstance(batch_axes, str) else tuple(batch_axes or ()))
+    bset = {a for a in bset if mesh.shape[a] > 1}
+    mp = mesh.shape[model_axis]
+    n_shards = int(np.prod([mesh.shape[a] for a in bset])) if bset else 1
+    if cfg.d_ff % mp or B % max(n_shards, 1):
+        return None  # caller falls back to the auto variant
+    manual = bset | {model_axis}
+    T_local = (B // n_shards) * S
+    capacity = _capacity(T_local, cfg)
+    bspec = batch_axes if isinstance(batch_axes, str) else tuple(batch_axes)
+    xspec = P(bspec, None, None)
+
+    # f32 boundary (XLA-CPU manual-collective constraint, DESIGN.md §10)
+    x32 = x.astype(jnp.float32)
+    p32 = jax.tree.map(lambda w: w.astype(jnp.float32), p)
+    pspecs = {"router": P(), "wi": P(None, None, model_axis),
+              "wg": P(None, None, model_axis), "wo": P(None, model_axis, None)}
+
+    def body(xl, pl):
+        Bl = xl.shape[0]
+        out, aux = _moe_local_manual_tp(xl.reshape(Bl * S, D), pl, cfg,
+                                        capacity, model_axis)
+        return out.reshape(Bl, S, D), aux[None]
+
+    out, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(xspec, pspecs),
+        out_specs=(xspec, P(tuple(sorted(manual)))),
+        axis_names=manual, check_vma=False,
+    )(x32, p32)
+    return out.astype(x.dtype), jnp.mean(aux)
+
+
+def _filter_manual(spec: P, manual: set) -> P:
+    axes = []
+    for ax in spec:
+        if ax is None:
+            axes.append(None)
+        elif isinstance(ax, str):
+            axes.append(ax if ax in manual else None)
+        else:
+            kept = tuple(a for a in ax if a in manual)
+            axes.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*axes)
+
+
+def _moe_local_manual_tp(x, p, cfg: LMConfig, capacity: int, model_axis: str):
+    """Fully-manual variant: expert FFN runs on a local d_ff shard and the
+    cross-`model` reduction happens AFTER the token combine — the all-reduce
+    payload is (T, D) instead of the (E, C, D) expert buffer (2.5–3x less
+    volume at capacity_factor 1.25, the §Perf 'combine-before-reduce' win).
+    f32 in/out (XLA-CPU manual-collective dtype constraint)."""
+    T, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    logits = x @ p["router"]                                      # f32
+    gate_vals, eidx = jax.lax.top_k(logits, K)
+    gates = jax.nn.softmax(gate_vals, axis=-1)
+    probs = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.float32)
+    f_e = jnp.mean(jnp.sum(onehot, axis=1), axis=0)
+    aux = E * jnp.sum(f_e * jnp.mean(probs, axis=0))
+
+    oh = onehot.reshape(T * K, E)
+    ranks = jnp.cumsum(oh, axis=0) - oh
+    rank = jnp.sum(ranks * oh, axis=-1).astype(jnp.int32)
+    flat_e = eidx.reshape(T * K)
+    keep = rank < capacity
+    slot = jnp.where(keep, flat_e * capacity + rank, E * capacity)
+    tok_of = jnp.arange(T * K) // K
+    buf = jnp.zeros((E * capacity, D), x.dtype).at[slot].set(x[tok_of], mode="drop")
+    expert_in = buf.reshape(E, capacity, D)
+
+    h = jnp.einsum("ecd,edf->ecf", expert_in, p["wi"])            # f local shard
+    g = jnp.einsum("ecd,edf->ecf", expert_in, p["wg"])
+    h = jax.nn.silu(g) * h
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"]).reshape(E * capacity, D)  # PARTIAL over f
+
+    back = jnp.take(y, jnp.minimum(slot, E * capacity - 1), axis=0)
+    back = back * keep[:, None].astype(y.dtype) * gates.reshape(T * K, 1)
+    out_partial = jnp.sum(back.reshape(T, K, D), axis=1)
+    out = jax.lax.psum(out_partial, model_axis)                   # (T,D) f32 AR
+    return out, aux
+
+
+def moe_apply(p: dict, x: jnp.ndarray, cfg: LMConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D) -> (B,S,D), aux. Shard-local dispatch under a mesh."""
+    B, S, D = x.shape
+    rules = current_rules()
+    if rules is None:
+        out, aux = _moe_local(x.reshape(B * S, D), p, cfg, _capacity(B * S, cfg))
+        return out.reshape(B, S, D), aux
+    if rules.rules.get("moe_manual_tp") and rules.rules.get("ffn"):
+        r = _moe_apply_manual_tp(p, x, cfg, rules)
+        if r is not None:
+            return r
+
+    mesh = rules.mesh
+    batch_axes = rules.rules.get("batch")
+    manual = set((batch_axes,) if isinstance(batch_axes, str) else tuple(batch_axes or ()))
+    manual = {a for a in manual if mesh.shape[a] > 1} or set()
+    n_shards = int(np.prod([mesh.shape[a] for a in manual])) if manual else 1
+    if n_shards == 1 or B % n_shards != 0:
+        out, aux = _moe_local(x.reshape(B * S, D), p, cfg, _capacity(B * S, cfg))
+        return out.reshape(B, S, D), aux
+
+    T_local = (B // n_shards) * S
+    capacity = _capacity(T_local, cfg)
+    xspec = _filter_manual(rules.spec("batch", "seq", "embed"), manual)
+
+    # Weights cross the shard_map boundary in f32 and replicated over the
+    # manual (batch) axes: the FSDP un-shard over `data` happens in auto-SPMD
+    # land outside, and the boundary psum of the weight cotangent runs in
+    # f32. (This XLA CPU build CHECK-fails on any sub-f32 collective inside
+    # manual shard_map regions — AllReducePromotion bug; on TPU bf16 would
+    # do. See DESIGN.md §9.)  The `model` axis stays auto: expert einsums
+    # are tensor-parallel over d_ff with XLA-inserted all-reduce.
+    p32 = jax.tree.map(lambda w: w.astype(jnp.float32), p)
+    model_ax = rules.rules.get("ffn")
+    if model_ax is not None:
+        # keep the f32 staging copies TP-sharded over `model` (only the
+        # FSDP `data` axis un-shards at the boundary) — without this the
+        # partitioner may replicate 3 full expert matrices per device
+        def _pin(w, spec):
+            return jax.lax.with_sharding_constraint(
+                w, jax.sharding.NamedSharding(mesh, spec))
+        F = cfg.d_ff
+        p32 = {
+            "router": p32["router"],
+            "wi": _pin(p32["wi"], P(None, None, model_ax)) if F % mesh.shape[model_ax] == 0 else p32["wi"],
+            "wg": _pin(p32["wg"], P(None, None, model_ax)) if F % mesh.shape[model_ax] == 0 else p32["wg"],
+            "wo": _pin(p32["wo"], P(None, model_ax, None)) if F % mesh.shape[model_ax] == 0 else p32["wo"],
+        }
+
+    def body(xl, pl):
+        Bl = xl.shape[0]
+        full = {
+            "router": pl["router"],
+            "wi": pl["wi"].astype(x.dtype),
+            "wg": pl["wg"].astype(x.dtype),
+            "wo": pl["wo"].astype(x.dtype),
+        }
+        out, aux = _moe_local(xl.reshape(Bl * S, D), full, cfg, capacity)
+        return out.reshape(Bl, S, D), aux[None]
+
+    out, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(xspec, jax.tree.map(lambda _: P(), p32)),
+        out_specs=(xspec, P(tuple(sorted(manual)))),
+        axis_names=manual,
+        check_vma=False,
+    )(x, p32)
+    return out, jnp.mean(aux)

@@ -1,0 +1,200 @@
+"""Mamba-2 (SSD) block — used by zamba2-7b (hybrid) and available standalone.
+
+Chunked SSD algorithm (Dao & Gu, arXiv:2405.21060): within-chunk quadratic
+attention-like term + inter-chunk recurrence on (H, N, P) states, carried by
+``lax.scan`` over chunks. ``ssd_reference`` is the O(S) sequential oracle used
+in tests. Grouped B/C (``G`` groups broadcast over ``H`` heads) as in the
+paper's multi-value variant.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.api import constrain
+from .lm_config import LMConfig
+from .layers import dense_init, rmsnorm
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., l) -> (..., l, l) with out[i,j] = sum_{t=j+1..i} x[t], -inf for j>i."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = np.tril(np.ones((l, l), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,      # (B,S,H,P)
+    dt: jnp.ndarray,     # (B,S,H)  (post-softplus)
+    A: jnp.ndarray,      # (H,)     (negative)
+    Bm: jnp.ndarray,     # (B,S,G,N)
+    Cm: jnp.ndarray,     # (B,S,G,N)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,   # (B,H,N,P)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xd = (x * dt[..., None]).astype(f32)                       # dt-discretized input
+    dA = (dt * A[None, None, :]).astype(f32)                   # (B,S,H), <= 0
+
+    def to_chunks(t):
+        return t.reshape(B, nc, chunk, *t.shape[2:])
+
+    xc, dAc = to_chunks(xd), to_chunks(dA)
+    Bc, Cc = to_chunks(Bm.astype(f32)), to_chunks(Cm.astype(f32))
+    Bh = jnp.repeat(Bc, rep, axis=3)                           # (B,nc,l,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    # the G->H broadcast breaks the head-dim sharding chain (G rarely divides
+    # the model axis; H does) — re-pin so every intra-chunk quadratic
+    # intermediate shards over heads instead of replicating
+    Bh = constrain(Bh, "batch", None, None, "heads", None)
+    Ch = constrain(Ch, "batch", None, None, "heads", None)
+    dAc = constrain(dAc, "batch", None, None, "heads")
+    xc = constrain(xc, "batch", None, None, "heads", None)
+
+    cum = jnp.cumsum(dAc, axis=2)                              # (B,nc,l,H)
+    # ---- intra-chunk (quadratic in chunk length) ----
+    L = jnp.exp(_segsum(jnp.swapaxes(dAc, 2, 3)))              # (B,nc,H,l,l)
+    scores = jnp.einsum("bnihm,bnjhm->bnhij", Ch, Bh)          # (B,nc,H,l,l)
+    y_diag = jnp.einsum("bnhij,bnjhp->bnihp", scores * L, xc)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)            # (B,nc,l,H)
+    states = jnp.einsum("bnlhm,bnlhp,bnlh->bnhmp", Bh, xc, decay_to_end)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # (B,nc,H)
+    s0 = jnp.zeros((B, H, N, P), f32) if init_state is None else init_state.astype(f32)
+
+    def step(carry, inp):
+        st, dec = inp                                          # (B,H,N,P), (B,H)
+        new = st + dec[..., None, None] * carry
+        return new, carry                                      # emit state *entering* the chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step, s0, (jnp.swapaxes(states, 0, 1), jnp.swapaxes(chunk_decay, 0, 1)))
+    prev_states = jnp.swapaxes(prev_states, 0, 1)              # (B,nc,H,N,P)
+
+    y_off = jnp.einsum("bnlhm,bnhmp,bnlh->bnlhp", Ch, prev_states, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_reference(x, dt, A, Bm, Cm, init_state=None):
+    """Sequential oracle: state = exp(dt·A)·state + dt·B⊗x ; y = C·state."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    st = jnp.zeros((B, H, N, P)) if init_state is None else init_state
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(dt[:, t] * A[None, :])                    # (B,H)
+        Bt = jnp.repeat(Bm[:, t], rep, axis=1)                 # (B,H,N)
+        Ct = jnp.repeat(Cm[:, t], rep, axis=1)
+        st = dA[..., None, None] * st + jnp.einsum(
+            "bhn,bhp->bhnp", Bt, x[:, t] * dt[:, t][..., None])
+        ys.append(jnp.einsum("bhn,bhnp->bhp", Ct, st))
+    return jnp.stack(ys, axis=1), st
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 block
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg: LMConfig, dtype) -> dict:
+    """Input projection split into per-role matrices (z/x, B+C, dt): each
+    width divides the model axis (2·d_inner, 2·G·N, H are all multiples of
+    typical TP degrees), where the fused 2·din+2GN+H column count is not —
+    fused layout forced replicated shards + replicated optimizer state."""
+    D, din, H, N, G = cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    conv_dim = din + 2 * G * N
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * din, dtype),          # z | x
+        "bc_proj": dense_init(ks[3], D, 2 * G * N, dtype),        # B | C
+        "dt_proj": dense_init(ks[4], D, H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim)) * 0.1).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((din,), dtype),
+        "out_proj": dense_init(ks[2], din, D, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, cache: Optional[jnp.ndarray]):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). cache: (B,K-1,C) or None."""
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    new_cache = xp[:, -(K - 1):] if K > 1 else None
+    return out, new_cache
+
+
+def mamba_apply(
+    p: dict,
+    x: jnp.ndarray,                  # (B,S,D)
+    cfg: LMConfig,
+    state: Optional[dict] = None,    # {"ssm": (B,H,N,P), "conv": (B,K-1,C)} for decode
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    B, S, D = x.shape
+    din, H, N, G, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_head_dim
+    z, xs = jnp.split(x @ p["in_proj"], [din], axis=-1)
+    Bm, Cm = jnp.split(x @ p["bc_proj"], [G * N], axis=-1)
+    dt = x @ p["dt_proj"]
+    xBC = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], None if state is None else state["conv"])
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = jnp.split(xBC, [din, din + G * N], axis=-1)
+    xs = constrain(xs.reshape(B, S, H, P), "batch", "seq", "heads", None)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if state is not None and S == 1:
+        # single-step recurrence (decode)
+        st = state["ssm"]
+        dA = jnp.exp(dt[:, 0] * A[None, :])
+        rep = H // G
+        Bt = jnp.repeat(Bm[:, 0], rep, axis=1)
+        Ct = jnp.repeat(Cm[:, 0], rep, axis=1)
+        st = dA[..., None, None] * st.astype(jnp.float32) + jnp.einsum(
+            "bhn,bhp->bhnp", Bt.astype(jnp.float32),
+            (xs[:, 0] * dt[:, 0][..., None]).astype(jnp.float32))
+        y = jnp.einsum("bhn,bhnp->bhp", Ct.astype(jnp.float32), st)[:, None]
+        new_state = {"ssm": st, "conv": new_conv}
+    else:
+        chunk = min(cfg.ssm_chunk, S)
+        if S % chunk:
+            chunk = S  # fallback for odd smoke shapes
+        init = state["ssm"] if state is not None else None
+        y, final = ssd_chunked(xs, dt, A, Bm, Cm, chunk, init_state=init)
+        new_state = None if state is None else {"ssm": final, "conv": new_conv}
+
+    y = y.astype(x.dtype) + xs * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, S, din)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"]
+    return constrain(out, "batch", "seq", "embed"), new_state
+
+
+def mamba_state_init(cfg: LMConfig, batch: int, dtype) -> dict:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }

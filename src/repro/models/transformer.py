@@ -1,0 +1,210 @@
+"""Scan-based decoder-only LM covering the dense / moe / vlm / audio
+families. One stacked parameter pytree per homogeneous layer stack:
+
+* ``layer_pattern="global"``  — a single stack scanned L times;
+* ``layer_pattern="local_global"`` — gemma-2-style strict alternation,
+  scanned as L/2 (local, global) *pairs* so the two flavors keep separate
+  KV-cache lengths (local layers only ever need a ``sliding_window`` ring).
+
+``lax.scan`` over stacked params keeps the HLO one-layer-sized (compile
+time at 512 devices) and ``jax.checkpoint`` around the body gives
+per-layer remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.api import constrain
+from .lm_config import LMConfig
+from . import layers as L
+from . import moe as MOE
+
+PyTree = Any
+
+
+def _dtype(cfg: LMConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def stack_init(layer_init, key, n: int, *args):
+    return jax.vmap(lambda k: layer_init(k, *args))(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# One block = attn + (ffn | moe), pre-norm (+ gemma2 sandwich post-norms)
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: LMConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": L.attn_init(k1, cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = MOE.moe_init(k2, cfg, dtype)
+    else:
+        p["ffn"] = L.ffn_init(k2, cfg, dtype)
+    if cfg.final_softcap is not None:  # gemma2 sandwich norms
+        p["post_ln1"] = jnp.zeros((cfg.d_model,), dtype)
+        p["post_ln2"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def block_apply(p, x, cfg: LMConfig, positions, window, cache, prefix_len):
+    h = L.rmsnorm(x, p["ln1"])
+    a, new_cache = L.attn_apply(p["attn"], h, cfg, positions, window, cache, prefix_len)
+    if "post_ln1" in p:
+        a = L.rmsnorm(a, p["post_ln1"])
+    x = x + a
+    h = L.rmsnorm(x, p["ln2"])
+    if cfg.family == "moe":
+        f, aux = MOE.moe_apply(p["moe"], h, cfg)
+    else:
+        f, aux = L.ffn_apply(p["ffn"], h, cfg), jnp.zeros((), jnp.float32)
+    if "post_ln2" in p:
+        f = L.rmsnorm(f, p["post_ln2"])
+    return x + f, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: LMConfig) -> PyTree:
+    dt = _dtype(cfg)
+    ke, kb, kh = jax.random.split(key, 3)
+    params: dict = {
+        "embed": (jax.random.normal(ke, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if cfg.layer_pattern == "local_global":
+        assert cfg.num_layers % 2 == 0
+        ka, kg = jax.random.split(kb)
+        params["blocks_local"] = stack_init(block_init, ka, cfg.num_layers // 2, cfg, dt)
+        params["blocks_global"] = stack_init(block_init, kg, cfg.num_layers // 2, cfg, dt)
+    else:
+        params["blocks"] = stack_init(block_init, kb, cfg.num_layers, cfg, dt)
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(kh, cfg.d_model, cfg.vocab_size, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill / decode) — caches optional
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg: LMConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def embed_inputs(params, batch, cfg: LMConfig):
+    """tokens and/or precomputed frontend embeddings -> (x, prefix_len)."""
+    dt = _dtype(cfg)
+    parts = []
+    prefix_len = 0
+    if batch.get("embeds") is not None:
+        parts.append(batch["embeds"].astype(dt))
+        prefix_len = batch["embeds"].shape[1]
+    if batch.get("tokens") is not None:
+        e = jnp.take(params["embed"], batch["tokens"], axis=0)
+        parts.append(e)
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    if cfg.family != "vlm":
+        prefix_len = 0  # audio embeds are the whole (causal) sequence
+    return x, prefix_len
+
+
+def unembed(params, x, cfg: LMConfig):
+    logits = x @ params["embed"].T if cfg.tie_embeddings else x @ params["head"]
+    logits = logits.astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def forward(
+    params: PyTree,
+    batch: dict,
+    cfg: LMConfig,
+    caches: Optional[PyTree] = None,
+    positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray]:
+    """Returns (logits, new_caches, aux). ``caches`` stacked over layers."""
+    x, prefix_len = embed_inputs(params, batch, cfg)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = constrain(x, "batch", "seq", "embed")
+
+    window = cfg.sliding_window
+
+    if cfg.layer_pattern == "local_global":
+        def body(x, inp):
+            (pl, pg), (cl, cg) = inp
+            x, ncl, aux1 = block_apply(pl, x, cfg, positions, window, cl, prefix_len)
+            x, ncg, aux2 = block_apply(pg, x, cfg, positions, None, cg, prefix_len)
+            return x, ((ncl, ncg), aux1 + aux2)
+
+        n_pairs = cfg.num_layers // 2
+        cl = caches["local"] if caches is not None else None
+        cg = caches["global"] if caches is not None else None
+        if caches is None:
+            cl = cg = _none_like(n_pairs)
+        x, (new_caches, auxs) = jax.lax.scan(
+            _remat(body, cfg), x,
+            ((params["blocks_local"], params["blocks_global"]), (cl, cg)),
+            unroll=cfg.scan_unroll)
+        new_caches = None if caches is None else {"local": new_caches[0], "global": new_caches[1]}
+    else:
+        def body(x, inp):
+            pl, c = inp
+            x, nc, aux = block_apply(pl, x, cfg, positions, window, c, prefix_len)
+            return x, (nc, aux)
+
+        c = caches if caches is not None else _none_like(cfg.num_layers)
+        x, (new_caches, auxs) = jax.lax.scan(_remat(body, cfg), x, (params["blocks"], c),
+                                             unroll=cfg.scan_unroll)
+        if caches is None:
+            new_caches = None
+
+    x = L.rmsnorm(x, params["final_norm"])
+    return unembed(params, x, cfg), new_caches, jnp.sum(auxs)
+
+
+def _none_like(n):
+    return None  # None is an empty pytree: scans cleanly as "no cache"
+
+
+def init_caches(cfg: LMConfig, batch: int, max_len: int) -> PyTree:
+    """Stacked KV caches. Local stacks allocate only the sliding window."""
+    dt = _dtype(cfg)
+    Kv, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def stacked(n, length):
+        return {
+            "k": jnp.zeros((n, batch, length, Kv, hd), dt),
+            "v": jnp.zeros((n, batch, length, Kv, hd), dt),
+            "pos": jnp.full((n, batch, length), -1, jnp.int32),
+        }
+
+    if cfg.layer_pattern == "local_global":
+        w = min(cfg.sliding_window or max_len, max_len)
+        return {
+            "local": stacked(cfg.num_layers // 2, w),
+            "global": stacked(cfg.num_layers // 2, max_len),
+        }
+    length = max_len if cfg.sliding_window is None else min(cfg.sliding_window, max_len)
+    return stacked(cfg.num_layers, length)

@@ -1,0 +1,214 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM (matrix memory,
+parallelizable) and sLSTM (scalar memory, true recurrence via lax.scan).
+
+``mlstm_parallel`` (training/prefill) and the stepwise recurrence
+(``mlstm_step``) are exact rearrangements of each other — asserted in tests.
+xlstm-350m uses groups of (slstm_every-1) mLSTM blocks followed by one sLSTM
+block (the paper's xLSTM[7:1] layout for slstm_every=8).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.api import constrain
+from .lm_config import LMConfig
+from .layers import dense_init, rmsnorm
+from .ssm import _causal_conv
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_parallel(q, k, v, i_raw, f_raw):
+    """q,k,v: (B,S,H,hd); i_raw,f_raw: (B,S,H). Returns (B,S,H,hd).
+
+    D_ij = sum_{t=j+1..i} logsig(f_t) + i_j ;  S_ij = (q_i k_j/sqrt(d)) e^{D_ij - m_i}
+    h_i = sum_j S_ij v_j / max(|sum_j S_ij|, e^{-m_i})
+    """
+    B, S, H, hd = q.shape
+    lf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))          # (B,S,H)
+    F = jnp.cumsum(lf, axis=1)
+    D = F[:, :, None, :] - F[:, None, :, :] + i_raw.astype(jnp.float32)[:, None, :, :]
+    mask = np.tril(np.ones((S, S), bool))[None, :, :, None]
+    D = jnp.where(mask, D, NEG_INF)                              # (B,Sq,Sk,H)
+    m = jnp.max(D, axis=2, keepdims=True)                        # (B,Sq,1,H)
+    Dstab = jnp.exp(D - m)
+    scores = jnp.einsum("bihd,bjhd->bijh", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    Sm = scores * Dstab
+    norm = jnp.maximum(jnp.abs(jnp.sum(Sm, axis=2)), jnp.exp(-m[:, :, 0, :]))  # (B,S,H)
+    h = jnp.einsum("bijh,bjhd->bihd", Sm, v.astype(jnp.float32)) / norm[..., None]
+    return h.astype(q.dtype)
+
+
+def mlstm_step(state, q, k, v, i_raw, f_raw):
+    """One decode step. state: {"C": (B,H,hd,hd), "n": (B,H,hd), "m": (B,H)}.
+    q,k,v: (B,H,hd); gates (B,H)."""
+    C, n, m = state["C"], state["n"], state["m"]
+    hd = q.shape[-1]
+    lf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    i_raw = i_raw.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, i_raw)
+    fs = jnp.exp(lf + m - m_new)[..., None]
+    is_ = jnp.exp(i_raw - m_new)[..., None]
+    kq = k.astype(jnp.float32) / np.sqrt(hd)
+    C = fs[..., None] * C + is_[..., None] * jnp.einsum("bhk,bhv->bhkv", kq, v.astype(jnp.float32))
+    n = fs * n + is_ * kq
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhkv,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.sum(n * qf, axis=-1)), jnp.exp(-m_new))
+    h = num / den[..., None]
+    return {"C": C, "n": n, "m": m_new}, h.astype(q.dtype)
+
+
+def mlstm_block_init(key, cfg: LMConfig, dtype) -> dict:
+    D = cfg.d_model
+    di = int(cfg.xlstm_proj_factor * D)
+    H = cfg.num_heads
+    hd = di // H
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.zeros((D,), dtype),
+        "up": dense_init(ks[0], D, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (4, di)) * 0.1).astype(dtype),
+        "wq": dense_init(ks[2], di, di, dtype),
+        "wk": dense_init(ks[3], di, di, dtype),
+        "wv": dense_init(ks[4], di, di, dtype),
+        "w_gates": dense_init(ks[5], di, 2 * H, dtype),
+        "skip": jnp.ones((di,), dtype),
+        "out_norm": jnp.zeros((di,), dtype),
+        "down": dense_init(ks[6], di, D, dtype),
+    }
+
+
+def mlstm_block_apply(p, x, cfg: LMConfig, state=None):
+    """x: (B,S,D). state (decode): {"C","n","m","conv"}."""
+    B, S, D = x.shape
+    di = int(cfg.xlstm_proj_factor * D)
+    H = cfg.num_heads
+    hd = di // H
+    h = rmsnorm(x, p["norm"])
+    u, gate = jnp.split(h @ p["up"], 2, axis=-1)
+    cu, new_conv = _causal_conv(u, p["conv_w"], None if state is None else state["conv"])
+    cu = jax.nn.silu(cu)
+    q = (cu @ p["wq"]).reshape(B, S, H, hd)
+    k = (cu @ p["wk"]).reshape(B, S, H, hd)
+    v = (u @ p["wv"]).reshape(B, S, H, hd)
+    gates = cu @ p["w_gates"]
+    i_raw, f_raw = jnp.split(gates.reshape(B, S, 2 * H), 2, axis=-1)
+    if state is None:
+        o = mlstm_parallel(q, k, v, i_raw, f_raw)
+        new_state = None
+    elif S == 1:
+        st = {"C": state["C"], "n": state["n"], "m": state["m"]}
+        st, o = mlstm_step(st, q[:, 0], k[:, 0], v[:, 0], i_raw[:, 0], f_raw[:, 0])
+        o = o[:, None]
+        new_state = {**st, "conv": new_conv}
+    else:
+        # prefill: parallel outputs + closed-form final state
+        o = mlstm_parallel(q, k, v, i_raw, f_raw)
+        lf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+        F = jnp.cumsum(lf, axis=1)                                    # (B,S,H)
+        d = F[:, -1:, :] - F + i_raw.astype(jnp.float32)              # (B,S,H)
+        m_fin = jnp.max(d, axis=1)                                    # (B,H)
+        w = jnp.exp(d - m_fin[:, None, :])                            # (B,S,H)
+        kq = k.astype(jnp.float32) / np.sqrt(hd)
+        C = jnp.einsum("bsh,bshk,bshv->bhkv", w, kq, v.astype(jnp.float32))
+        n = jnp.einsum("bsh,bshk->bhk", w, kq)
+        new_state = {"C": C, "n": n, "m": m_fin, "conv": new_conv}
+    o = o.reshape(B, S, di) + p["skip"] * cu
+    o = rmsnorm(o, p["out_norm"]) * jax.nn.silu(gate)
+    return constrain(o @ p["down"], "batch", "seq", "embed"), new_state
+
+
+def mlstm_state_init(cfg: LMConfig, batch: int, dtype) -> dict:
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    hd = di // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), 0.0, jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_block_init(key, cfg: LMConfig, dtype) -> dict:
+    D, H = cfg.d_model, cfg.num_heads
+    hd = D // H
+    ks = jax.random.split(key, 4)
+    dff = int(4 * D / 3)
+    return {
+        "norm": jnp.zeros((D,), dtype),
+        "w": dense_init(ks[0], D, 4 * D, dtype),                  # i,f,z,o
+        "r": (jax.random.normal(ks[1], (4, H, hd, hd)) / np.sqrt(hd)).astype(dtype),
+        "out_norm": jnp.zeros((D,), dtype),
+        "ffn_up": dense_init(ks[2], D, 2 * dff, dtype),
+        "ffn_down": dense_init(ks[3], dff, D, dtype),
+    }
+
+
+def _slstm_cell(carry, wx, r):
+    """carry: (c,n,h,m) each (B,H,hd); wx: (B,4,H,hd) pre-activations."""
+    c, n, h, m = carry
+    rh = jnp.einsum("ghkv,bhk->bghv", r.astype(jnp.float32), h)   # (B,4,H,hd)
+    pre = wx.astype(jnp.float32) + rh
+    i_raw, f_raw, z_raw, o_raw = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    m_new = jnp.maximum(f_raw + m, i_raw)
+    i_ = jnp.exp(i_raw - m_new)
+    f_ = jnp.exp(f_raw + m - m_new)
+    c = f_ * c + i_ * jnp.tanh(z_raw)
+    n = f_ * n + i_
+    h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1e-6)
+    return (c, n, h, m_new)
+
+
+def slstm_block_apply(p, x, cfg: LMConfig, state=None):
+    B, S, D = x.shape
+    H = cfg.num_heads
+    hd = D // H
+    xin = rmsnorm(x, p["norm"])
+    wx = (xin @ p["w"]).reshape(B, S, 4, H, hd)
+
+    if state is None or S > 1:
+        if state is None:
+            init = tuple(jnp.zeros((B, H, hd), jnp.float32) for _ in range(4))
+        else:
+            init = (state["c"], state["n"], state["h"], state["m"])
+
+        def step(carry, wx_t):
+            carry = _slstm_cell(carry, wx_t, p["r"])
+            return carry, carry[2]
+
+        fin, hs = jax.lax.scan(step, init, jnp.swapaxes(wx, 0, 1))
+        h = jnp.swapaxes(hs, 0, 1).reshape(B, S, D).astype(x.dtype)
+        new_state = None if state is None else {
+            "c": fin[0], "n": fin[1], "h": fin[2], "m": fin[3]}
+    else:
+        carry = (state["c"], state["n"], state["h"], state["m"])
+        carry = _slstm_cell(carry, wx[:, 0], p["r"])
+        h = carry[2].reshape(B, 1, D).astype(x.dtype)
+        new_state = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+
+    h = rmsnorm(h, p["out_norm"])
+    up, gate = jnp.split(h @ p["ffn_up"], 2, axis=-1)
+    out = (jax.nn.gelu(gate, approximate=True) * up) @ p["ffn_down"]
+    return constrain(out, "batch", "seq", "embed"), new_state
+
+
+def slstm_state_init(cfg: LMConfig, batch: int) -> dict:
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": z()}

@@ -1,0 +1,136 @@
+"""Fault-tolerant checkpointing: atomic (tmp + rename), manifested,
+keep-last-k, resumable, mesh-agnostic.
+
+Arrays are stored *logically* (full values, path-keyed inside an .npz), so
+a job can restart on a different mesh/topology and re-shard at load — the
+elastic-scaling path (`train.elastic`). Multi-host: only process 0 writes
+(others no-op), everyone reads. SIGTERM-triggered emergency saves via
+``install_signal_save``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import signal
+import tempfile
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "|"
+
+
+def _flatten(tree: PyTree) -> dict:
+    flat = {}
+
+    def f(path, leaf):
+        if leaf is None:
+            return
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                        for k in path)
+        flat[key] = np.asarray(leaf)
+
+    jax.tree_util.tree_map_with_path(f, tree)
+    return flat
+
+
+def _unflatten_into(skeleton: PyTree, flat: dict) -> PyTree:
+    def f(path, leaf):
+        if leaf is None:
+            return None
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                        for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key!r}: ckpt {arr.shape} vs model {leaf.shape}")
+        return arr
+    return jax.tree_util.tree_map_with_path(f, skeleton)
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree, *, keep: int = 3,
+         extra_meta: Optional[dict] = None) -> str:
+    """Atomic save. Returns the final checkpoint path."""
+    if jax.process_index() != 0:
+        return os.path.join(ckpt_dir, f"step_{step:010d}")
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=ckpt_dir)
+    try:
+        flat = _flatten(tree)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        meta = {"step": step, "time": time.time(), "n_arrays": len(flat),
+                "bytes": int(sum(a.nbytes for a in flat.values()))}
+        meta.update(extra_meta or {})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(meta, f, indent=2)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)          # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d{10})", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, skeleton: PyTree, step: Optional[int] = None,
+            sharding_fn: Optional[Callable] = None) -> tuple:
+    """Restore into ``skeleton``'s structure. ``sharding_fn(path, arr)`` may
+    return a ``jax.sharding.Sharding`` to re-shard on load (elastic restart
+    onto a different mesh). Returns (tree, manifest)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        meta = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    tree = _unflatten_into(skeleton, flat)
+    if sharding_fn is not None:
+        def place(p, a):
+            if a is None:
+                return None
+            sh = sharding_fn(p, a)
+            return jax.device_put(a, sh) if sh is not None else a
+        tree = jax.tree_util.tree_map_with_path(place, tree)
+    return tree, meta
+
+
+def install_signal_save(fn: Callable[[], None], signals=(signal.SIGTERM, signal.SIGINT)):
+    """Emergency checkpoint on preemption (SIGTERM is what a cluster sends)."""
+    def handler(signum, frame):
+        fn()
+        raise SystemExit(128 + signum)
+    for s in signals:
+        signal.signal(s, handler)

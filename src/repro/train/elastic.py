@@ -1,0 +1,52 @@
+"""Elastic scaling: restart a job on a different mesh shape.
+
+Checkpoints store logical (full) arrays (see ``train.checkpoint``), so
+elasticity reduces to: restore -> ``jax.device_put`` each leaf with the
+sharding derived from the *new* mesh's rules. Divisibility fallbacks in
+``dist.sharding`` keep small tensors replicated when the new mesh is
+larger than a dimension allows.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+
+from ..dist.api import ShardingRules
+from . import checkpoint as ckpt
+
+PyTree = Any
+
+
+def restore_elastic(
+    ckpt_dir: str,
+    skeleton: PyTree,
+    rules: Optional[ShardingRules],
+    spec_tree: Optional[PyTree] = None,
+    step: Optional[int] = None,
+):
+    """Restore a checkpoint onto the current mesh.
+
+    ``spec_tree`` mirrors ``skeleton`` with PartitionSpecs (from
+    ``dist.sharding.param_specs``); leaves without a spec are replicated.
+    """
+    if rules is None or spec_tree is None:
+        return ckpt.restore(ckpt_dir, skeleton, step=step)
+
+    flat_specs = {}
+
+    def collect(path, spec):
+        key = jax.tree_util.keystr(path)
+        flat_specs[key] = spec
+        return spec
+
+    jax.tree_util.tree_map_with_path(collect, spec_tree, is_leaf=lambda x: x is None or not isinstance(x, (dict, list, tuple)))
+
+    def sharding_fn(path, arr):
+        key = jax.tree_util.keystr(path)
+        spec = flat_specs.get(key)
+        if spec is None:
+            return jax.sharding.NamedSharding(rules.mesh, jax.sharding.PartitionSpec())
+        return jax.sharding.NamedSharding(rules.mesh, spec)
+
+    return ckpt.restore(ckpt_dir, skeleton, step=step, sharding_fn=sharding_fn)

@@ -1,0 +1,159 @@
+"""Training loop machinery: jitted step factory (grad accumulation,
+pruning-mask discipline, optional gradient compression), epoch driver with
+HAPM / uniform-pruning callbacks, and the straggler watchdog.
+
+Mask discipline: the loss is evaluated on ``apply_masks(params, masks)`` —
+the chain rule then zeroes gradients of pruned weights automatically — and
+masks are re-applied after the optimizer update so pruned weights sit at
+exactly 0.0 (what the accelerator's DSB and the block-sparse kernel rely
+on).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.masks import apply_masks
+from . import compression as C
+from .optimizer import apply_updates
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    grad_accum: int = 1
+    compression: Optional[str] = None        # None | "topk" | "int8"
+    compression_frac: float = 0.01
+
+
+def make_train_step(
+    loss_fn: Callable,                       # (params, batch) -> (loss, metrics)
+    opt_update: Callable,
+    step_cfg: StepConfig = StepConfig(),
+    donate: bool = True,
+):
+    """Returns jitted ``step(params, opt_state, masks, comp_err, batch, lr)``
+    -> (params', opt_state', comp_err', metrics)."""
+
+    def grads_of(params, batch):
+        def lf(p, b):
+            loss, metrics = loss_fn(p, b)
+            return loss, metrics
+        if step_cfg.grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params, batch)
+            return grads, {**metrics, "loss": loss}
+
+        A = step_cfg.grad_accum
+        micro = jax.tree.map(lambda x: x.reshape(A, x.shape[0] // A, *x.shape[1:]), batch)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, metrics), g = jax.value_and_grad(lf, has_aux=True)(params, mb)
+            acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, g)
+            return (acc, loss_acc + loss), metrics
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, loss_sum), metrics = jax.lax.scan(body, (zero, 0.0), micro)
+        grads = jax.tree.map(lambda g: g / A, gsum)
+        metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+        return grads, {**metrics, "loss": loss_sum / A}
+
+    def step(params, opt_state, masks, comp_err, batch, lr):
+        masked = apply_masks(params, masks)
+        grads, metrics = grads_of(masked, batch)
+        if step_cfg.compression == "topk":
+            grads, comp_err = C.topk_compress(grads, comp_err, step_cfg.compression_frac)
+        elif step_cfg.compression == "int8":
+            grads, comp_err = C.int8_compress(grads, comp_err)
+        updates, opt_state = opt_update(grads, opt_state, params, lr)
+        params = apply_updates(params, updates)
+        params = apply_masks(params, masks)
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        return params, opt_state, comp_err, {**metrics, "grad_norm": gnorm}
+
+    donated = (0, 1, 3) if donate else ()
+    return jax.jit(step, donate_argnums=donated)
+
+
+# ---------------------------------------------------------------------------
+# Straggler watchdog (host-side; unit-tested with a fake clock)
+# ---------------------------------------------------------------------------
+
+class StepWatchdog:
+    """Flags steps slower than ``factor``× the EMA step time. On a real
+    cluster the flag feeds the controller's replace-host decision; here it
+    is surfaced in metrics/logs."""
+
+    def __init__(self, factor: float = 3.0, ema: float = 0.9,
+                 clock: Callable[[], float] = time.monotonic):
+        self.factor = factor
+        self.ema_w = ema
+        self.clock = clock
+        self._ema = None
+        self._t0 = None
+        self.straggler_events = 0
+
+    def start(self):
+        self._t0 = self.clock()
+
+    def stop(self) -> bool:
+        dt = self.clock() - self._t0
+        slow = self._ema is not None and dt > self.factor * self._ema
+        if slow:
+            self.straggler_events += 1
+        # slow steps don't poison the EMA
+        if self._ema is None:
+            self._ema = dt
+        elif not slow:
+            self._ema = self.ema_w * self._ema + (1 - self.ema_w) * dt
+        return slow
+
+
+# ---------------------------------------------------------------------------
+# Epoch driver with pruning callbacks
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EpochCallbacks:
+    """``on_epoch_start(epoch, params) -> masks`` lets HAPM / uniform pruning
+    update masks between epochs (paper Alg. 3 line 6-10)."""
+    on_epoch_start: Optional[Callable] = None
+    on_step: Optional[Callable] = None
+
+
+def run_epochs(
+    *, params, opt_state, masks, step_fn, batches_per_epoch, epochs,
+    batch_iter, lr_fn, callbacks: EpochCallbacks = EpochCallbacks(),
+    comp_err=None, watchdog: Optional[StepWatchdog] = None, log_every: int = 0,
+):
+    """Simple single-host epoch loop used by examples/benchmarks."""
+    history = []
+    step = 0
+    for epoch in range(epochs):
+        if callbacks.on_epoch_start is not None:
+            masks = callbacks.on_epoch_start(epoch, params, masks)
+        losses = []
+        for _ in range(batches_per_epoch):
+            batch = next(batch_iter)
+            lr = lr_fn(step) if callable(lr_fn) else lr_fn
+            if watchdog:
+                watchdog.start()
+            params, opt_state, comp_err, metrics = step_fn(
+                params, opt_state, masks, comp_err, batch, lr)
+            if watchdog:
+                watchdog.stop()
+            losses.append(float(metrics["loss"]))
+            if callbacks.on_step is not None:
+                callbacks.on_step(step, metrics)
+            if log_every and step % log_every == 0:
+                print(f"  step {step}: loss={losses[-1]:.4f}")
+            step += 1
+        history.append(float(np.mean(losses)))
+    return params, opt_state, masks, comp_err, history

@@ -1,0 +1,116 @@
+"""Hand-rolled pytree optimizers (no optax in this container): SGD-momentum
+(the CNN reproduction) and AdamW with f32 master state (LM training), plus
+LR schedules including ReduceLROnPlateau (the paper trains with it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+class SGDState(NamedTuple):
+    momentum: PyTree
+
+
+def sgd(momentum: float = 0.9, nesterov: bool = False, weight_decay: float = 0.0):
+    def init(params):
+        return SGDState(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m + g
+            step = (g + momentum * m_new) if nesterov else m_new
+            return (-lr * step).astype(p.dtype), m_new
+        out = jax.tree.map(upd, grads, state.momentum, params)
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, SGDState(new_m)
+
+    return init, update
+
+
+class AdamWState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jnp.ndarray
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1,
+          moment_dtype=jnp.float32):
+    """``moment_dtype=bfloat16`` halves optimizer HBM (mu/nu) — the
+    DeepSeek-style memory trade; updates still computed in f32."""
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return AdamWState(jax.tree.map(z, params), jax.tree.map(z, params),
+                          jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu_new = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+            nu_new = b2 * nu.astype(jnp.float32) + (1 - b2) * g * g
+            step = (mu_new / bc1) / (jnp.sqrt(nu_new / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype), mu_new.astype(moment_dtype), nu_new.astype(moment_dtype)
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), AdamWState(pick(1), pick(2), c)
+
+    return init, update
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(step):
+        step = float(step)
+        if step < warmup:
+            return base_lr * step / max(warmup, 1)
+        frac = (step - warmup) / max(total - warmup, 1)
+        return base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + np.cos(np.pi * min(frac, 1.0))))
+    return lr
+
+
+@dataclasses.dataclass
+class ReduceLROnPlateau:
+    """Keras-equivalent: shrink LR when the monitored metric stops improving
+    (the paper's training recipe, §IV-A)."""
+    base_lr: float
+    factor: float = 0.5
+    patience: int = 5
+    min_lr: float = 1e-5
+    best: float = np.inf
+    wait: int = 0
+    lr: float = 0.0
+
+    def __post_init__(self):
+        self.lr = self.base_lr
+
+    def step(self, metric: float) -> float:
+        if metric < self.best - 1e-6:
+            self.best = metric
+            self.wait = 0
+        else:
+            self.wait += 1
+            if self.wait >= self.patience:
+                self.lr = max(self.lr * self.factor, self.min_lr)
+                self.wait = 0
+        return self.lr

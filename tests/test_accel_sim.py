@@ -1,0 +1,112 @@
+"""Algorithm-2 schedule reference vs lax.conv, and the DSB simulator."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.accel import (AcceleratorConfig, BOARDS, conv_schedule_reference,
+                         schedule_step_trace, simulate)
+from repro.core import (HAPMConfig, apply_masks, hapm_element_masks,
+                        hapm_epoch_update, hapm_init)
+from repro.models import cnn
+
+
+@pytest.mark.parametrize("stride,cin,cout,n_cu", [(1, 5, 7, 4), (2, 3, 8, 4), (1, 2, 3, 12)])
+def test_algorithm2_equals_conv(stride, cin, cout, n_cu):
+    rng = np.random.RandomState(0)
+    x = rng.randn(11, 9, cin).astype(np.float32)
+    k = rng.randn(3, 3, cin, cout).astype(np.float32)
+    b = rng.randn(cout).astype(np.float32)
+    out = conv_schedule_reference(x, k, b, stride, AcceleratorConfig(n_cu=n_cu))
+    ref = jax.lax.conv_general_dilated(
+        x[None], k, (stride, stride), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[0] + b
+    np.testing.assert_allclose(out, np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_schedule_trace_matches_group_ids():
+    steps = schedule_step_trace(cin=3, cout=8, accel=AcceleratorConfig(n_cu=4))
+    assert len(steps) == 3 * 2
+    # execution order: f_block outer, g inner; flat id = g * n_fb + fb
+    assert steps[0] == (0, 0, 0)
+    assert steps[1] == (0, 1, 2)
+    assert steps[3] == (1, 0, 1)
+
+
+def _tiny_cnn():
+    cfg = cnn.ResNetConfig(stages=(1, 1), widths=(8, 16), image_size=16)
+    params, state = cnn.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params, state
+
+
+def test_simulator_hapm_speedup_and_accuracy_fields():
+    cfg, params, state = _tiny_cnn()
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (16, 16, 16, 3))
+    labels = jnp.zeros((16,), jnp.int32)
+    accel = dataclasses.replace(BOARDS["zedboard_100mhz_72dsp"], n_cu=4)
+    base = simulate(params, state, cfg, accel, imgs, labels)
+    assert base.accuracy is not None
+    assert base.mean_time_per_image_s > 0
+
+    specs = cnn.conv_group_specs(params, accel.n_cu)
+    hcfg = HAPMConfig(0.5, 1)
+    st = hapm_init(specs, hcfg)
+    st = hapm_epoch_update(st, specs, params, hcfg)
+    pruned = apply_masks(params, hapm_element_masks(specs, st))
+    rep = simulate(pruned, state, cfg, accel, imgs, labels)
+    # ~50% of groups skipped -> substantially faster with DSB
+    assert rep.mean_time_per_image_s < 0.72 * base.mean_time_per_image_s
+    assert rep.gops > base.gops
+
+    # without DSB hardware the same pruned network is NOT faster
+    no_dsb = dataclasses.replace(accel, dsb=False)
+    rep2 = simulate(pruned, state, cfg, no_dsb)
+    assert rep2.mean_time_per_image_s == pytest.approx(
+        simulate(params, state, cfg, no_dsb).mean_time_per_image_s)
+
+
+def test_fifo_depth_improves_time():
+    cfg, params, state = _tiny_cnn()
+    a8 = dataclasses.replace(BOARDS["zedboard_100mhz_72dsp"], fifo_depth=8)
+    a32 = dataclasses.replace(BOARDS["zedboard_100mhz_72dsp"], fifo_depth=32)
+    t8 = simulate(params, state, cfg, a8).mean_time_per_image_s
+    t32 = simulate(params, state, cfg, a32).mean_time_per_image_s
+    assert t32 < t8
+
+
+def test_bn_fold_preserves_eval_output():
+    cfg, params, state = _tiny_cnn()
+    x = jax.random.uniform(jax.random.PRNGKey(2), (4, 16, 16, 3))
+    ref, _ = cnn.apply(params, state, x, cfg, train=False)
+    folded = cnn.fold_batchnorm(params, state, cfg)
+
+    # manual forward with folded conv+bias must match BN-eval forward
+    def fwd_folded(x):
+        h = cnn._conv(x, folded["conv0"]["w"], 1) + folded["conv0"]["b"]
+        h = jax.nn.relu(h)
+        for si, n_blocks in enumerate(cfg.stages):
+            for bi in range(n_blocks):
+                name = f"s{si}b{bi}"
+                blk = folded[name]
+                stride = 2 if (si > 0 and bi == 0) else 1
+                y = cnn._conv(h, blk["conv1"]["w"], stride) + blk["conv1"]["b"]
+                y = jax.nn.relu(y)
+                y = cnn._conv(y, blk["conv2"]["w"], 1) + blk["conv2"]["b"]
+                sc = (cnn._conv(h, blk["proj"]["w"], stride) + blk["proj"]["b"]
+                      if "proj" in blk else h)
+                h = jax.nn.relu(y + sc)
+        pooled = jnp.mean(h, axis=(1, 2))
+        return pooled @ folded["fc"]["w"] + folded["fc"]["b"]
+
+    np.testing.assert_allclose(np.asarray(fwd_folded(x)), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_layer_dims_count():
+    cfg = cnn.ResNetConfig()
+    params, _ = cnn.init(jax.random.PRNGKey(0), cfg)
+    dims = cnn.layer_dims(cfg, params)
+    assert len(dims) == 21                     # the paper's 21 conv layers
+    assert 0.03e9 < cnn.network_ops(cfg, params) < 0.1e9

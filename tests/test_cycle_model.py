@@ -1,0 +1,75 @@
+"""Paper Eq. 3–9 cycle model: exactness on the worked example + DSB math."""
+import numpy as np
+import pytest
+
+from repro.accel import (AcceleratorConfig, ConvLayerDims, dsb_cycles,
+                         min_cycles, network_cycles, schedule_counts,
+                         theoretical_gops, writeback_cycles)
+
+
+ACCEL = AcceleratorConfig(cu_x=2, cu_y=3, n_cu=12)
+# paper worked example: 32x32 'same'-padded to 34x34 (Alg.1: sizes include padding)
+LAYER = ConvLayerDims(n_ix=34, n_iy=34, n_if=12, n_of=12, kx=3, ky=3)
+
+
+def test_paper_worked_example_exact():
+    assert min_cycles(LAYER, ACCEL) == 12288
+
+
+def test_schedule_counts_worked_example():
+    sc = schedule_counts(LAYER, ACCEL)
+    assert sc.p_x == 32
+    assert sc.g_cu == 2           # "two 3x3 convolutions..."
+    assert sc.ratio == 1
+    assert sc.n_steps == 12
+    assert sc.cycles_per_step == 1024  # "...every 4 clock cycles" x 32 x 8
+
+
+def test_dsb_group_skip_arithmetic():
+    # pruning half the (f_block, g) groups halves the DSB cycles
+    gm = np.ones(12, np.float32)
+    gm[:6] = 0
+    assert dsb_cycles(LAYER, ACCEL, gm) == 12288 // 2
+    # no DSB hardware -> no savings regardless of sparsity
+    no_dsb = AcceleratorConfig(cu_x=2, cu_y=3, n_cu=12, dsb=False)
+    assert dsb_cycles(LAYER, no_dsb, gm) == 12288
+
+
+def test_dsb_empty_and_full_masks():
+    assert dsb_cycles(LAYER, ACCEL, np.zeros(12, np.float32)) == 0
+    assert dsb_cycles(LAYER, ACCEL, np.ones(12, np.float32)) == 12288
+    assert dsb_cycles(LAYER, ACCEL, None) == 12288
+
+
+def test_more_cus_never_slower():
+    base = None
+    for n_cu in (4, 6, 12):
+        accel = AcceleratorConfig(cu_x=2, cu_y=3, n_cu=n_cu)
+        c = min_cycles(ConvLayerDims(34, 34, 12, 12), accel)
+        if base is not None:
+            assert c <= base
+        base = c
+
+
+def test_network_cycles_and_gops():
+    layers = [LAYER, ConvLayerDims(18, 18, 12, 24)]
+    nc = network_cycles(layers, ACCEL)
+    assert nc.total_min == sum(min_cycles(l, ACCEL) for l in layers)
+    assert nc.total_ops == sum(l.ops for l in layers)
+    t_full = nc.seconds(ACCEL, with_dsb=False, with_stalls=False)
+    t_stall = nc.seconds(ACCEL, with_dsb=False, with_stalls=True)
+    assert t_stall > t_full
+    assert nc.gops(ACCEL, False) == pytest.approx(nc.total_ops / t_stall / 1e9)
+
+
+def test_theoretical_gops_increases_with_parallelism():
+    layers = [ConvLayerDims(34, 34, 16, 32), ConvLayerDims(18, 18, 32, 32)]
+    g12 = theoretical_gops(layers, AcceleratorConfig(n_cu=12))
+    g24 = theoretical_gops(layers, AcceleratorConfig(n_cu=24))
+    assert g24 > g12
+
+
+def test_writeback_penalty():
+    wb = writeback_cycles(LAYER, ACCEL)
+    assert wb == int(np.ceil(LAYER.out_x * LAYER.out_y * LAYER.n_of
+                             / ACCEL.writeback_words_per_cycle))

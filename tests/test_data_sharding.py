@@ -1,0 +1,101 @@
+"""Data pipeline determinism/sharding and sharding-rule derivation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.data.synthetic import SyntheticCifar, TokenStream
+from repro.dist.api import ShardingRules, constrain, use_rules
+from repro.dist.sharding import ShardFlags, make_rules, param_specs
+
+
+def test_cifar_deterministic_and_learnable_structure():
+    ds1 = SyntheticCifar(num_train=256, num_test=64, seed=3)
+    ds2 = SyntheticCifar(num_train=256, num_test=64, seed=3)
+    np.testing.assert_array_equal(ds1.train_x, ds2.train_x)
+    assert ds1.train_x.shape == (256, 32, 32, 3)
+    assert ds1.train_x.min() >= 0 and ds1.train_x.max() <= 1
+    # class structure: same-class images correlate more than cross-class
+    def centroid(c):
+        return ds1.train_x[ds1.train_y == c].mean(0).ravel()
+    c0, c1 = centroid(0), centroid(1)
+    x0 = ds1.train_x[ds1.train_y == 0][0].ravel()
+    assert np.dot(x0 - x0.mean(), c0 - c0.mean()) > np.dot(x0 - x0.mean(), c1 - c1.mean())
+
+
+def test_cifar_host_slicing_disjoint():
+    ds = SyntheticCifar(num_train=128, num_test=32, seed=0)
+    got = []
+    for pi in range(2):
+        for x, y in ds.epoch(16, seed=5, augment=False, process_index=pi, process_count=2):
+            got.append((pi, x.sum()))
+    sums = [g[1] for g in got]
+    assert len(set(np.round(sums, 3))) == len(sums)  # no duplicated batches
+
+
+def test_token_stream_markov_structure():
+    ts = TokenStream(vocab_size=1000, seq_len=64, seed=1)
+    b = next(ts.batches(8, seed=2))
+    assert b["tokens"].shape == (8, 64)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+    # deterministic per (seed, process)
+    b2 = next(TokenStream(vocab_size=1000, seq_len=64, seed=1).batches(8, seed=2))
+    np.testing.assert_array_equal(b["tokens"], b2["tokens"])
+    # different hosts draw different data
+    b3 = next(ts.batches(8, seed=2, process_index=1, process_count=2))
+    assert not np.array_equal(b["tokens"], b3["tokens"])
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_rules_spec_and_dedupe():
+    rules = ShardingRules(mesh=_mesh(), rules={"batch": ("data",), "heads": "model",
+                                               "seq": "model"})
+    assert rules.spec("batch", "seq", "heads") == P(("data",), "model", None)
+    assert rules.spec("batch", None, "heads") == P(("data",), None, "model")
+
+
+def test_constrain_noop_without_rules():
+    x = jnp.ones((4, 4))
+    assert constrain(x, "batch", "embed") is x
+
+
+def test_param_specs_patterns():
+    from repro.configs import registry
+    from repro.models import lm
+    cfg = registry.get("qwen3-32b").smoke
+    params = jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0), cfg))
+    rules = make_rules(_mesh(), "train", ShardFlags())
+    specs = param_specs(params, rules)
+    # embedding: vocab over model, fsdp over data — but smoke dims don't divide,
+    # the fallback must replicate rather than fail
+    assert isinstance(specs["embed"], P)
+    blk = specs["blocks"]
+    assert isinstance(blk["attn"]["wq"], P)
+    assert blk["ln1"] == P(None, None)
+
+
+def test_param_specs_full_config_divisible():
+    from repro.configs import registry
+    from repro.models import lm
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    rules = ShardingRules(mesh=mesh, rules={"batch": ("data",), "heads": "model",
+                                            "ffn": "model", "vocab": "model",
+                                            "fsdp": "data"})
+    cfg = registry.get("qwen3-32b").config
+    params = jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0), cfg))
+    specs = param_specs(params, rules)
+    blk = specs["blocks"]
+    # col-parallel: (L, D, H*hd) -> (None, fsdp, model); sizes divide at 16x16
+    assert blk["attn"]["wq"] == P(None, "data", "model")
+    assert blk["attn"]["wo"] == P(None, "model", "data")
+    assert blk["ffn"]["wi"] == P(None, "data", "model")
+    assert specs["embed"] == P("model", "data")

@@ -1,0 +1,124 @@
+"""HAPM core: group specs, the Alg.-3 loop, global cross-layer sorting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (HAPMConfig, HAPMState, apply_masks, fpga_conv_groups,
+                        flat_groups, hapm_element_masks, hapm_epoch_update,
+                        hapm_group_sparsity, hapm_init, tpu_tile_groups)
+
+
+def test_fpga_group_shapes():
+    spec = fpga_conv_groups((3, 3, 12, 12), n_cu=12)
+    assert spec.num_groups == 12            # cin * ceil(cout/n_cu)
+    assert spec.group_size == 3 * 3 * 12
+    assert spec.group_elem_counts().sum() == 3 * 3 * 12 * 12
+
+
+def test_fpga_group_remainder():
+    spec = fpga_conv_groups((3, 3, 4, 10), n_cu=4)   # 10 = 2 full + 1 partial block
+    assert spec.num_groups == 4 * 3
+    counts = spec.group_elem_counts().reshape(4, 3)
+    assert (counts[:, :2] == 36).all() and (counts[:, 2] == 18).all()
+    assert counts.sum() == 3 * 3 * 4 * 10
+
+
+def test_fpga_expand_matches_schedule_slab():
+    """Pruning group (g=2, f_block=1) must zero exactly k[:,:,2,n_cu:2*n_cu]."""
+    spec = fpga_conv_groups((3, 3, 4, 8), n_cu=4)
+    gm = np.ones(spec.num_groups, np.float32)
+    gm[2 * spec._meta[1] + 1] = 0          # group id = g * n_fblocks + f_block
+    m = np.asarray(spec.expand(jnp.asarray(gm)))
+    assert m.sum() == 3 * 3 * 4 * 8 - 3 * 3 * 4
+    assert (m[:, :, 2, 4:8] == 0).all()
+    assert m[:, :, 2, :4].all() and m[:, :, 3].all()
+
+
+def test_fpga_scores_match_manual():
+    rng = np.random.RandomState(0)
+    w = rng.randn(3, 3, 2, 4).astype(np.float32)
+    spec = fpga_conv_groups(w.shape, n_cu=2)
+    s = np.asarray(spec.group_scores(jnp.asarray(w)))
+    manual = np.zeros((2, 2))
+    for g in range(2):
+        for fb in range(2):
+            manual[g, fb] = np.abs(w[:, :, g, fb * 2:(fb + 1) * 2]).sum()
+    np.testing.assert_allclose(s, manual.reshape(-1), rtol=1e-6)
+
+
+def test_tpu_tile_roundtrip():
+    spec = tpu_tile_groups((300, 250), (128, 128))   # non-divisible on purpose
+    assert spec.num_groups == 3 * 2
+    counts = spec.group_elem_counts()
+    assert counts.sum() == 300 * 250
+    gm = np.zeros(spec.num_groups, np.float32)
+    m = np.asarray(spec.expand(jnp.asarray(gm)))
+    assert m.shape == (300, 250) and (m == 0).all()
+
+
+def test_tpu_tile_leading_dims():
+    spec = tpu_tile_groups((4, 256, 256), (128, 128))  # e.g. experts or layers
+    assert spec.num_groups == 4 * 2 * 2
+    gm = np.ones(spec.num_groups, np.float32)
+    gm[:4] = 0                                          # first expert's 4 tiles
+    m = np.asarray(spec.expand(jnp.asarray(gm)))
+    assert (m[0] == 0).all() and m[1:].all()
+
+
+def _setup(sparsity=0.5, epochs=5):
+    specs = {"a": fpga_conv_groups((3, 3, 4, 8), 4), "b": tpu_tile_groups((256, 256)),
+             "c": None}
+    params = {"a": jnp.ones((3, 3, 4, 8)), "b": jnp.ones((256, 256)) * 1e-4,
+              "c": jnp.ones((7,))}
+    cfg = HAPMConfig(sparsity, epochs)
+    return specs, params, cfg
+
+
+def test_hapm_reaches_target_and_monotone():
+    specs, params, cfg = _setup(0.5, 5)
+    st = hapm_init(specs, cfg)
+    total = st.total_groups
+    prev = 0
+    for _ in range(8):  # more epochs than schedule: must clamp at target
+        st = hapm_epoch_update(st, specs, params, cfg)
+        assert st.groups_pruned >= prev
+        prev = st.groups_pruned
+    assert st.groups_pruned == int(round(0.5 * total))
+    assert hapm_group_sparsity(st) == pytest.approx(0.5, abs=0.02)
+
+
+def test_hapm_global_sort_suppresses_small_layer():
+    """Fig.-4 behavior: the low-magnitude layer is pruned first."""
+    specs, params, cfg = _setup(0.3, 3)
+    st = hapm_init(specs, cfg)
+    for _ in range(3):
+        st = hapm_epoch_update(st, specs, params, cfg)
+    # layer b has tiny weights -> all pruning lands there
+    assert (st.group_masks["b"] == 0).sum() == st.groups_pruned
+    assert (st.group_masks["a"] == 1).all()
+
+
+def test_hapm_never_reprunes():
+    specs, params, cfg = _setup(0.9, 9)
+    st = hapm_init(specs, cfg)
+    seen = set()
+    for _ in range(9):
+        st2 = hapm_epoch_update(st, specs, params, cfg)
+        newly = {(k, i) for k in ("a", "b")
+                 for i in np.nonzero((st.group_masks[k] == 1) & (st2.group_masks[k] == 0))[0]}
+        assert not (seen & newly)
+        seen |= newly
+        st = st2
+
+
+def test_element_masks_apply():
+    specs, params, cfg = _setup(0.5, 1)
+    st = hapm_init(specs, cfg)
+    st = hapm_epoch_update(st, specs, params, cfg)
+    masks = hapm_element_masks(specs, st)
+    pruned = apply_masks(params, masks)
+    assert masks["c"] is None
+    assert float(jnp.sum(pruned["c"])) == 7.0
+    total_zeros = sum(float(jnp.sum(m == 0)) for m in (masks["a"], masks["b"]))
+    assert total_zeros > 0

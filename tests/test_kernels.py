@@ -1,0 +1,100 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant as Q
+from repro.kernels import ops, ref
+from repro.sparse.block_mask import (plan_from_tile_mask, plan_from_weight,
+                                     tile_mask_from_weight, transpose_plan)
+
+
+def _random_tile_mask(rng, nKb, nNb, density):
+    tm = rng.rand(nKb, nNb) < density
+    tm[rng.randint(nKb), :] |= False
+    return tm
+
+
+@pytest.mark.parametrize("M,K,N,density,dtype", [
+    (128, 256, 128, 1.0, jnp.float32),
+    (256, 512, 384, 0.5, jnp.float32),
+    (200, 384, 256, 0.3, jnp.float32),     # M not tile-aligned
+    (128, 256, 256, 0.5, jnp.bfloat16),
+    (64, 128, 128, 0.0, jnp.float32),      # fully pruned -> zeros
+])
+def test_block_sparse_sweep(M, K, N, density, dtype):
+    rng = np.random.RandomState(hash((M, K, N)) % 2**31)
+    block = (128, 128)
+    tm = _random_tile_mask(rng, K // 128, N // 128, density)
+    w = jnp.asarray(rng.randn(K, N), dtype)
+    x = jnp.asarray(rng.randn(M, K), dtype)
+    plan = plan_from_tile_mask(tm, block)
+    f = ops.make_block_sparse_matmul(plan, tm)
+    out = f(x, w)
+    expect = ref.block_sparse_matmul_ref(x, w, jnp.asarray(tm), block)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), rtol=tol, atol=tol)
+    if density == 0.0:
+        assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_block_sparse_grads_match_ref():
+    rng = np.random.RandomState(0)
+    K, N, M = 256, 256, 128
+    block = (128, 128)
+    tm = np.asarray([[True, False], [False, True]])
+    w = jnp.asarray(rng.randn(K, N).astype(np.float32))
+    x = jnp.asarray(rng.randn(M, K).astype(np.float32))
+    plan = plan_from_tile_mask(tm, block)
+    f = ops.make_block_sparse_matmul(plan, tm)
+
+    gx, gw = jax.grad(lambda x, w: jnp.sum(f(x, w) ** 2), (0, 1))(x, w)
+    rx, rw = jax.grad(lambda x, w: jnp.sum(
+        ref.block_sparse_matmul_ref(x, w, jnp.asarray(tm), block) ** 2), (0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), rtol=1e-3, atol=1e-3)
+    # gradient respects the mask: pruned tiles receive zero gradient
+    assert float(jnp.abs(gw[:128, 128:]).max()) == 0.0
+
+
+def test_plan_density_and_transpose():
+    rng = np.random.RandomState(3)
+    w = rng.randn(256, 384).astype(np.float32)
+    w[:128, :128] = 0
+    tm = tile_mask_from_weight(w, (128, 128))
+    assert tm.shape == (2, 3) and not tm[0, 0] and tm[1:].all()
+    plan = plan_from_tile_mask(tm, (128, 128))
+    assert plan.density == pytest.approx(5 / 6)
+    assert plan.skipped_tiles == 1
+    tp = transpose_plan(plan, tm)
+    assert tp.tiles == (3, 2)
+    assert tp.cnt.sum() == plan.cnt.sum()
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (100, 256, 128), (256, 384, 256)])
+def test_int8_matmul_bit_exact(M, K, N):
+    rng = np.random.RandomState(M + K + N)
+    x = jnp.asarray(rng.uniform(-4, 4, (M, K)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(-2, 2, (K, N)).astype(np.float32))
+    out = ops.fixed_point_matmul(x, w)
+    expect = ref.int8_matmul_ref(Q.to_int(x, Q.Q3_4), Q.to_int(w, Q.Q2_5),
+                                 1.0 / (Q.Q3_4.scale * Q.Q2_5.scale))
+    assert bool(jnp.all(out == expect))      # integer arithmetic: exact
+
+
+def test_block_sparse_from_hapm_endtoend():
+    """HAPM element mask -> plan -> kernel == masked dense matmul."""
+    rng = np.random.RandomState(5)
+    w = rng.randn(256, 256).astype(np.float32)
+    from repro.core import tpu_tile_groups
+    spec = tpu_tile_groups(w.shape, (128, 128))
+    gm = np.asarray([1, 0, 0, 1], np.float32)
+    emask = np.asarray(spec.expand(jnp.asarray(gm)))
+    f, plan = ops.block_sparse_from_hapm(w, emask)
+    assert plan.skipped_tiles == 2
+    x = jnp.asarray(rng.randn(64, 256).astype(np.float32))
+    out = f(x, jnp.asarray(w))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(x @ (jnp.asarray(w) * emask)), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,120 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.accel import AcceleratorConfig, ConvLayerDims, dsb_cycles, min_cycles
+from repro.core import (Q2_5, Q3_4, apply_masks, fpga_conv_groups, quantize,
+                        tpu_tile_groups)
+from repro.core.uniform import magnitude_masks
+from repro.sparse.block_mask import plan_from_tile_mask, tile_mask_from_weight
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(kx=st.integers(1, 4), cin=st.integers(1, 6), cout=st.integers(1, 20),
+       n_cu=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_fpga_groups_partition_weights(kx, cin, cout, n_cu):
+    """Groups are a partition: element counts sum to the weight count, and
+    expanding an all-zero group mask zeroes everything."""
+    spec = fpga_conv_groups((kx, kx, cin, cout), n_cu)
+    assert spec.group_elem_counts().sum() == kx * kx * cin * cout
+    m0 = np.asarray(spec.expand(jnp.zeros(spec.num_groups)))
+    m1 = np.asarray(spec.expand(jnp.ones(spec.num_groups)))
+    assert (m0 == 0).all() and (m1 == 1).all()
+
+
+@given(K=st.integers(1, 400), N=st.integers(1, 400),
+       bk=st.sampled_from([32, 128]), bn=st.sampled_from([32, 128]))
+@settings(**SETTINGS)
+def test_tile_groups_partition(K, N, bk, bn):
+    spec = tpu_tile_groups((K, N), (bk, bn))
+    assert spec.group_elem_counts().sum() == K * N
+    assert spec.num_groups == -(-K // bk) * (-(-N // bn))
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_group_mask_expand_score_consistency(data):
+    """Pruned groups score exactly zero after masking; kept groups keep
+    their score (mask-apply/score commute)."""
+    cin = data.draw(st.integers(1, 4))
+    cout = data.draw(st.integers(1, 12))
+    spec = fpga_conv_groups((3, 3, cin, cout), n_cu=3)
+    rng = np.random.RandomState(data.draw(st.integers(0, 100)))
+    w = jnp.asarray(rng.randn(3, 3, cin, cout).astype(np.float32))
+    gm = jnp.asarray((rng.rand(spec.num_groups) > 0.5).astype(np.float32))
+    wm = w * spec.expand(gm)
+    s = np.asarray(spec.group_scores(wm))
+    s0 = np.asarray(spec.group_scores(w))
+    np.testing.assert_allclose(s, s0 * np.asarray(gm), rtol=1e-5, atol=1e-6)
+
+
+@given(st.lists(st.floats(-50, 50, allow_nan=False), min_size=1, max_size=64))
+@settings(**SETTINGS)
+def test_quantize_idempotent_and_bounded(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    for fmt in (Q2_5, Q3_4):
+        q = quantize(x, fmt)
+        np.testing.assert_array_equal(np.asarray(quantize(q, fmt)), np.asarray(q))
+        assert float(q.max(initial=fmt.min_val)) <= fmt.max_val
+        assert float(q.min(initial=fmt.max_val)) >= fmt.min_val
+        # error bounded by half a step inside the range
+        inside = (x >= fmt.min_val) & (x <= fmt.max_val)
+        err = jnp.abs(q - x) * inside
+        assert float(err.max()) <= 0.5 / fmt.scale + 1e-6
+
+
+@given(sparsity=st.floats(0.0, 0.99), n=st.integers(4, 300))
+@settings(**SETTINGS)
+def test_magnitude_mask_count_exact(sparsity, n):
+    rng = np.random.RandomState(n)
+    p = {"w": jnp.asarray(rng.randn(n).astype(np.float32))}
+    m = magnitude_masks(p, {"w": jnp.ones(n)}, sparsity)
+    assert int(jnp.sum(m["w"] == 0)) == int(round(sparsity * n))
+
+
+@given(nKb=st.integers(1, 6), nNb=st.integers(1, 6), seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_plan_indices_cover_live_tiles(nKb, nNb, seed):
+    rng = np.random.RandomState(seed)
+    tm = rng.rand(nKb, nNb) < 0.5
+    plan = plan_from_tile_mask(tm, (128, 128))
+    for j in range(nNb):
+        live = set(np.nonzero(tm[:, j])[0])
+        listed = set(plan.idx[j, :plan.cnt[j]])
+        assert listed == live
+    assert plan.cnt.sum() == tm.sum()
+
+
+@given(nif=st.integers(1, 16), ratio_seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_dsb_cycles_monotone_in_mask(nif, ratio_seed):
+    """More pruned groups can never cost more cycles."""
+    accel = AcceleratorConfig(n_cu=4)
+    layer = ConvLayerDims(18, 18, nif, 8)
+    rng = np.random.RandomState(ratio_seed)
+    from repro.accel.cycle_model import schedule_counts
+    n = schedule_counts(layer, accel).n_steps
+    gm = (rng.rand(n) > 0.5).astype(np.float32)
+    c1 = dsb_cycles(layer, accel, gm)
+    gm2 = gm.copy()
+    nz = np.nonzero(gm2)[0]
+    if len(nz):
+        gm2[nz[0]] = 0
+    c2 = dsb_cycles(layer, accel, gm2)
+    assert c2 <= c1 <= min_cycles(layer, accel)
+
+
+@given(seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_apply_masks_idempotent(seed):
+    rng = np.random.RandomState(seed)
+    p = {"a": jnp.asarray(rng.randn(8, 8).astype(np.float32)), "b": jnp.ones(3)}
+    m = {"a": jnp.asarray((rng.rand(8, 8) > 0.3).astype(np.float32)), "b": None}
+    once = apply_masks(p, m)
+    twice = apply_masks(once, m)
+    for k in p:
+        np.testing.assert_array_equal(np.asarray(once[k]), np.asarray(twice[k]))

@@ -1,0 +1,72 @@
+"""Fixed-point quantization (Q2.5/Q3.4) and Zhu-Gupta uniform pruning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Q2_5, Q3_4, QFormat, UniformPruneConfig, fake_quant,
+                        from_int, magnitude_masks, quantize, sparsity_at,
+                        to_int)
+
+
+def test_qformat_ranges():
+    assert Q2_5.bits == 8 and Q3_4.bits == 8
+    assert Q2_5.max_val == 4.0 - 1 / 32
+    assert Q2_5.min_val == -4.0
+    assert Q3_4.max_val == 8.0 - 1 / 16
+
+
+def test_quantize_grid_and_clip():
+    x = jnp.asarray([0.0, 1.0 / 32, 1.0 / 64, 5.0, -5.0, 0.7])
+    q = np.asarray(quantize(x, Q2_5))
+    assert q[0] == 0.0
+    assert q[1] == 1.0 / 32                  # representable: unchanged
+    assert q[2] in (0.0, 1.0 / 32)           # rounds to a grid point
+    assert q[3] == Q2_5.max_val and q[4] == Q2_5.min_val
+    assert abs(q[5] - 0.7) <= 1 / 64 + 1e-7  # within half a step
+
+
+def test_quantize_idempotent():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    q1 = quantize(x, Q3_4)
+    q2 = quantize(q1, Q3_4)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+def test_int_roundtrip():
+    x = jax.random.uniform(jax.random.PRNGKey(1), (64,), minval=-3, maxval=3)
+    codes = to_int(x, Q2_5)
+    assert codes.dtype == jnp.int32
+    np.testing.assert_allclose(np.asarray(from_int(codes, Q2_5)),
+                               np.asarray(quantize(x, Q2_5)), atol=1e-7)
+
+
+def test_ste_gradient():
+    g = jax.grad(lambda x: jnp.sum(quantize(x, Q2_5)))(jnp.asarray([0.5, 10.0, -10.0]))
+    np.testing.assert_array_equal(np.asarray(g), [1.0, 0.0, 0.0])  # clipped STE
+
+
+# --- uniform pruning ---------------------------------------------------------
+
+def test_cubic_schedule_endpoints():
+    cfg = UniformPruneConfig(target_sparsity=0.8, begin_step=100, end_step=1100)
+    assert sparsity_at(0, cfg) == 0.0
+    assert sparsity_at(100, cfg) == pytest.approx(0.0)
+    assert sparsity_at(1100, cfg) == pytest.approx(0.8)
+    assert sparsity_at(99999, cfg) == pytest.approx(0.8)
+    mid = sparsity_at(600, cfg)
+    assert 0.6 < mid < 0.8                    # cubic: front-loaded
+
+
+def test_magnitude_masks_exact_count_and_monotone():
+    rng = jax.random.PRNGKey(2)
+    params = {"w": jax.random.normal(rng, (40, 25)), "b": jnp.ones((7,))}
+    masks = {"w": jnp.ones((40, 25)), "b": None}
+    m1 = magnitude_masks(params, masks, 0.4)
+    assert int(jnp.sum(m1["w"] == 0)) == int(0.4 * 1000)
+    assert m1["b"] is None
+    # prune, then raise sparsity: pruned weights stay pruned
+    params2 = {"w": params["w"] * m1["w"], "b": params["b"]}
+    m2 = magnitude_masks(params2, masks, 0.6)
+    assert int(jnp.sum(m2["w"] == 0)) == 600
+    assert bool(jnp.all(m2["w"] * (1 - m1["w"]) == 0))  # m2 subset of m1 zeros

@@ -1,0 +1,64 @@
+"""End-to-end system test: the production LM training path (HAPM group
+masks in the step, AdamW, checkpoint/resume) learns on the synthetic
+stream and survives a simulated restart."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core import HAPMConfig, hapm_epoch_update, hapm_group_sparsity, hapm_init
+from repro.data.synthetic import TokenStream
+from repro.launch.train import build_train_step, init_group_masks
+from repro.models import lm
+from repro.train import checkpoint as CKPT
+
+
+def test_train_learns_prunes_and_resumes(tmp_path):
+    cfg = dataclasses.replace(registry.get("mistral-nemo-12b").smoke,
+                              num_layers=2, d_model=64, vocab_size=256)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    specs = lm.group_specs(params, cfg)
+    step_fn, opt_init = build_train_step(cfg, specs, lr=3e-3)
+    step_jit = jax.jit(step_fn)
+    opt_state = opt_init(params)
+
+    hcfg = HAPMConfig(0.25, 3)
+    hstate = hapm_init(specs, hcfg)
+    gmasks = init_group_masks(specs)
+
+    ds = TokenStream(cfg.vocab_size, seq_len=32)
+    it = ds.batches(8, seed=0)
+    losses = []
+    for step in range(30):
+        if step in (5, 12, 19):   # epoch boundaries: prune more groups
+            hstate = hapm_epoch_update(hstate, specs, params, hcfg)
+            gmasks = jax.tree.map(lambda m: None if m is None else jnp.asarray(m),
+                                  hstate.group_masks, is_leaf=lambda x: x is None)
+        params, opt_state, loss = step_jit(params, opt_state, gmasks, next(it))
+        losses.append(float(loss))
+        if step == 15:
+            CKPT.save(str(tmp_path), step, {"params": params, "opt": opt_state})
+
+    # learns: late loss well below early loss
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+    # pruned to target
+    assert abs(hapm_group_sparsity(hstate) - 0.25) < 0.05
+    # pruned weights are exactly zero in the masked view
+    from repro.core.groups import apply_group_mask, GroupSpec
+    wq = params["blocks"]["attn"]["wq"]
+    spec = specs["blocks"]["attn"]["wq"]
+    gm = gmasks["blocks"]["attn"]["wq"]
+    masked = apply_group_mask(spec, wq, gm)
+    if float(jnp.sum(gm == 0)) > 0:
+        assert float(jnp.min(jnp.abs(masked))) == 0.0
+
+    # resume from checkpoint: restored state continues without blowup
+    restored, meta = CKPT.restore(str(tmp_path), {"params": params, "opt": opt_state})
+    assert meta["step"] == 15
+    p2, o2 = restored["params"], restored["opt"]
+    p2 = jax.tree.map(jnp.asarray, p2)
+    o2 = jax.tree.map(jnp.asarray, o2)
+    _, _, loss2 = step_jit(p2, o2, gmasks, next(it))
+    assert np.isfinite(float(loss2))

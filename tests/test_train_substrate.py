@@ -1,0 +1,180 @@
+"""Optimizers, train-step factory (grad accumulation equivalence),
+compression error feedback, checkpointing, elastic restore, watchdog."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as CKPT
+from repro.train import compression as COMP
+from repro.train.loop import StepConfig, StepWatchdog, make_train_step
+from repro.train.optimizer import (ReduceLROnPlateau, adamw, apply_updates,
+                                   cosine_schedule, sgd)
+
+
+def test_sgd_momentum_closed_form():
+    init, update = sgd(momentum=0.5)
+    p = {"w": jnp.asarray([1.0])}
+    g = {"w": jnp.asarray([2.0])}
+    st = init(p)
+    u1, st = update(g, st, p, lr=0.1)
+    assert u1["w"][0] == pytest.approx(-0.2)          # m=2, step=-lr*m
+    u2, st = update(g, st, p, lr=0.1)
+    assert u2["w"][0] == pytest.approx(-0.1 * (0.5 * 2 + 2))
+
+
+def test_adamw_first_step_is_signed_lr():
+    init, update = adamw(weight_decay=0.0)
+    p = {"w": jnp.asarray([1.0, -1.0])}
+    g = {"w": jnp.asarray([0.3, -0.7])}
+    u, _ = update(g, init(p), p, lr=0.01)
+    np.testing.assert_allclose(np.asarray(u["w"]), [-0.01, 0.01], rtol=1e-4)
+
+
+def test_adamw_converges_quadratic():
+    init, update = adamw(weight_decay=0.0)
+    p = {"w": jnp.asarray([5.0, -3.0])}
+    st = init(p)
+    for _ in range(300):
+        g = {"w": 2 * p["w"]}
+        u, st = update(g, st, p, lr=0.05)
+        p = apply_updates(p, u)
+    assert float(jnp.abs(p["w"]).max()) < 0.1
+
+
+def test_reduce_lr_on_plateau():
+    s = ReduceLROnPlateau(base_lr=1.0, factor=0.5, patience=2)
+    assert s.step(1.0) == 1.0
+    assert s.step(0.9) == 1.0       # improving
+    assert s.step(0.95) == 1.0      # wait 1
+    assert s.step(0.95) == 0.5      # plateau -> halve
+    assert s.step(0.95) == 0.5
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=110)
+    assert lr(0) == 0.0
+    assert lr(10) == pytest.approx(1.0)
+    assert lr(110) == pytest.approx(0.1)
+    assert lr(60) < lr(20)
+
+
+# --- train step factory ------------------------------------------------------
+
+def _quad_loss(params, batch):
+    pred = batch["x"] @ params["w"]
+    loss = jnp.mean((pred - batch["y"]) ** 2)
+    return loss, {"dbg": loss}
+
+
+def _setup_step(ga, compression=None):
+    opt_init, opt_update = sgd(momentum=0.0)
+    step = make_train_step(_quad_loss, opt_update,
+                           StepConfig(grad_accum=ga, compression=compression),
+                           donate=False)
+    params = {"w": jnp.ones((4, 3))}
+    masks = {"w": None}
+    return step, params, opt_init(params), masks
+
+
+def test_grad_accum_equivalence():
+    rng = np.random.RandomState(0)
+    batch = {"x": jnp.asarray(rng.randn(8, 4).astype(np.float32)),
+             "y": jnp.asarray(rng.randn(8, 3).astype(np.float32))}
+    outs = []
+    for ga in (1, 2, 4):
+        step, params, opt, masks = _setup_step(ga)
+        p2, *_ = step(params, opt, masks, None, batch, 0.1)
+        outs.append(np.asarray(p2["w"]))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5)
+
+
+def test_masks_keep_pruned_at_zero():
+    step, params, opt, _ = _setup_step(1)
+    masks = {"w": jnp.ones((4, 3)).at[0].set(0.0)}
+    batch = {"x": jnp.ones((8, 4)), "y": jnp.zeros((8, 3))}
+    p, opt, _, m = step(params, opt, masks, None, batch, 0.1)
+    assert bool(jnp.all(p["w"][0] == 0.0))
+    p, *_ = step(p, opt, masks, None, batch, 0.1)
+    assert bool(jnp.all(p["w"][0] == 0.0))
+
+
+def test_compression_error_feedback_conservation():
+    g = {"w": jnp.asarray([[1.0, -0.1, 0.01, 3.0]])}
+    e = COMP.zeros_like_f32(g)
+    kept, e2 = COMP.topk_compress(g, e, frac=0.5)
+    np.testing.assert_allclose(np.asarray(kept["w"] + e2["w"]),
+                               np.asarray(g["w"]), rtol=1e-6)
+    assert int(jnp.sum(kept["w"] != 0)) == 2
+    # error re-enters next round
+    kept2, _ = COMP.topk_compress(g, e2, frac=0.5)
+    assert float(jnp.abs(kept2["w"]).sum()) > float(jnp.abs(kept["w"]).sum()) - 1e-6
+
+
+def test_int8_compression_bounded_error():
+    rng = np.random.RandomState(1)
+    g = {"w": jnp.asarray(rng.randn(64).astype(np.float32))}
+    e = COMP.zeros_like_f32(g)
+    deq, e2 = COMP.int8_compress(g, e)
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127
+    assert float(jnp.max(jnp.abs(e2["w"]))) <= scale
+    np.testing.assert_allclose(np.asarray(deq["w"] + e2["w"]), np.asarray(g["w"]), rtol=1e-5)
+
+
+# --- checkpointing -----------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3), "none": None},
+            "step_count": jnp.asarray(7)}
+    for s in (10, 20, 30, 40):
+        CKPT.save(str(tmp_path), s, tree, keep=2)
+    assert CKPT.all_steps(str(tmp_path)) == [30, 40]
+    assert CKPT.latest_step(str(tmp_path)) == 40
+    restored, meta = CKPT.restore(str(tmp_path), tree)
+    assert meta["step"] == 40
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    assert restored["params"]["none"] is None
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    CKPT.save(str(tmp_path), 1, {"w": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        CKPT.restore(str(tmp_path), {"w": jnp.ones((3, 3))})
+
+
+def test_checkpoint_atomic_no_partial_dirs(tmp_path):
+    CKPT.save(str(tmp_path), 5, {"w": jnp.ones(3)})
+    leftovers = [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
+    assert not leftovers
+
+
+def test_elastic_restore_replicates(tmp_path):
+    from repro.dist.api import ShardingRules
+    from repro.train.elastic import restore_elastic
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rules = ShardingRules(mesh=mesh, rules={"batch": "data"})
+    tree = {"w": jnp.ones((4, 4))}
+    CKPT.save(str(tmp_path), 3, tree)
+    restored, meta = restore_elastic(str(tmp_path), tree, rules,
+                                     {"w": jax.sharding.PartitionSpec("data", None)})
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.ones((4, 4)))
+
+
+def test_watchdog_flags_stragglers():
+    t = [0.0]
+    def clock():
+        return t[0]
+    wd = StepWatchdog(factor=3.0, clock=clock)
+    for dt in (1.0, 1.0, 1.0):
+        wd.start(); t[0] += dt
+        assert wd.stop() is False
+    wd.start(); t[0] += 10.0
+    assert wd.stop() is True
+    assert wd.straggler_events == 1
+    wd.start(); t[0] += 1.0            # EMA not poisoned by the slow step
+    assert wd.stop() is False
