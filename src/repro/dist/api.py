@@ -1,0 +1,148 @@
+"""Logical-axis sharding rules.
+
+Model code names *logical* axes (``batch``/``seq``/``embed``/``heads``/
+``ffn``/``vocab``/``fsdp``); a ``ShardingRules`` maps each to zero or more
+*mesh* axes. The mapping is installed for the duration of a trace with
+``use_rules`` and consumed by ``constrain`` — so the same model code runs
+unsharded (unit tests, single host) and sharded (dry-run, production mesh)
+without branching.
+
+Rule values:
+  ``None``            — replicated
+  ``"model"``         — one mesh axis (spec entry stays a string)
+  ``("pod", "data")`` — several mesh axes (spec entry stays a tuple)
+
+``spec`` dedupes mesh axes left-to-right: once a mesh axis is consumed by
+an earlier dimension, later dimensions naming it come out replicated
+(a PartitionSpec may not repeat a mesh axis).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+LogicalAxes = Union[None, str]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """A mesh plus the logical-axis -> mesh-axis mapping active on it.
+
+    ``rules`` may also carry boolean strategy flags (e.g.
+    ``moe_manual_tp``) that layer implementations query via
+    ``rules.rules.get(...)``; only string/tuple values participate in
+    ``spec``.
+    """
+    mesh: Any
+    rules: Dict[str, Any]
+
+    def spec(self, *logical_axes: LogicalAxes) -> P:
+        """PartitionSpec for a tensor whose dims carry ``logical_axes``.
+
+        ``None`` and unknown logical names map to replicated dims.
+        """
+        entries = []
+        used: set = set()
+        for ax in logical_axes:
+            rule = self.rules.get(ax) if ax is not None else None
+            entries.append(_take(rule, used))
+        return P(*entries)
+
+    def sharding(self, *logical_axes: LogicalAxes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical_axes))
+
+
+def _take(rule: Any, used: set) -> MeshAxes:
+    """Resolve one rule value against already-consumed mesh axes."""
+    if rule is None or rule is True or rule is False:
+        return None
+    if isinstance(rule, str):
+        if rule in used:
+            return None
+        used.add(rule)
+        return rule
+    kept = []
+    for a in rule:
+        if a not in used:
+            used.add(a)
+            kept.append(a)
+    return tuple(kept) if kept else None
+
+
+# ---------------------------------------------------------------------------
+# Active-rules context
+# ---------------------------------------------------------------------------
+
+_STACK: list = []
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    """Install ``rules`` for the duration of the block (reentrant).
+
+    ``use_rules(None)`` is allowed and makes ``constrain`` a no-op inside —
+    callers can thread an optional rules object without branching.
+    """
+    _STACK.append(rules)
+    try:
+        yield rules
+    finally:
+        _STACK.pop()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return _STACK[-1] if _STACK else None
+
+
+# ---------------------------------------------------------------------------
+# constrain
+# ---------------------------------------------------------------------------
+
+def axes_size(mesh, entry: MeshAxes) -> int:
+    """Total number of shards a spec entry induces on its dim."""
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return int(mesh.shape[entry])
+    return int(np.prod([mesh.shape[a] for a in entry], dtype=np.int64)) if entry else 1
+
+
+def divisible_spec(spec: P, shape: Sequence[int], mesh) -> P:
+    """Replicate any dim the mesh cannot split evenly.
+
+    The fallback of record for smoke configs and elastic restarts: a dim
+    whose size does not divide by the assigned mesh-axes product comes out
+    ``None`` instead of erroring (uneven GSPMD shards would silently pad).
+    """
+    entries = []
+    for i, e in enumerate(spec):
+        if i >= len(shape):
+            entries.append(None)
+            continue
+        n = axes_size(mesh, e)
+        entries.append(e if n <= 1 or shape[i] % n == 0 else None)
+    return P(*entries)
+
+
+def constrain(x, *logical_axes: LogicalAxes):
+    """``with_sharding_constraint(x, rules.spec(*logical_axes))`` under
+    active rules; the identity (same object) when no rules are installed.
+
+    Trailing dims beyond ``logical_axes`` are replicated; indivisible dims
+    fall back to replicated (see ``divisible_spec``).
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    if len(logical_axes) > x.ndim:
+        raise ValueError(
+            f"constrain: {len(logical_axes)} logical axes for rank-{x.ndim} "
+            f"value {getattr(x, 'shape', None)}")
+    spec = divisible_spec(rules.spec(*logical_axes), x.shape, rules.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))

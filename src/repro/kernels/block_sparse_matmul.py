@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..dist.compat import tpu_compiler_params
+
 
 def _kernel(idx_ref, cnt_ref, x_ref, w_ref, o_ref, acc_ref):
     j, s = pl.program_id(1), pl.program_id(2)
@@ -72,6 +74,6 @@ def block_sparse_matmul(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(idx, cnt, x, w)

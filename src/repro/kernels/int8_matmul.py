@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..dist.compat import tpu_compiler_params
+
 
 def _kernel(scale_ref, x_ref, w_ref, o_ref, acc_ref):
     k = pl.program_id(2)
@@ -63,6 +65,6 @@ def int8_matmul(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(scale, x_codes, w_codes)

@@ -24,6 +24,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..dist.api import current_rules
+from ..dist.compat import shard_map
 from .lm_config import LMConfig
 from .layers import dense_init
 
@@ -85,24 +86,33 @@ def _moe_local(x: jnp.ndarray, p: dict, cfg: LMConfig, capacity: int) -> Tuple[j
     return out, aux
 
 
+def _active_batch_axes(rules, mesh):
+    """rules["batch"] -> (ordered tuple, n_shards) of size>1 mesh axes.
+
+    Specs handed to shard_map may only name manual axes, and size-1 axes
+    are not worth going manual over — so both MoE variants scope their
+    manual set to this."""
+    batch_axes = rules.rules.get("batch")
+    order = (batch_axes,) if isinstance(batch_axes, str) else tuple(batch_axes or ())
+    kept = tuple(a for a in order if mesh.shape[a] > 1)
+    n_shards = int(np.prod([mesh.shape[a] for a in kept])) if kept else 1
+    return kept, n_shards
+
+
 def _moe_apply_manual_tp(p, x, cfg: LMConfig, rules):
     """Manual over (batch axes + model): dispatch local, expert FFN on local
     d_ff shards, single f32 psum after combine (combine-before-reduce)."""
     B, S, D = x.shape
     mesh = rules.mesh
     model_axis = rules.rules["ffn"]
-    batch_axes = rules.rules.get("batch")
-    bset = set((batch_axes,) if isinstance(batch_axes, str) else tuple(batch_axes or ()))
-    bset = {a for a in bset if mesh.shape[a] > 1}
+    kept, n_shards = _active_batch_axes(rules, mesh)
     mp = mesh.shape[model_axis]
-    n_shards = int(np.prod([mesh.shape[a] for a in bset])) if bset else 1
-    if cfg.d_ff % mp or B % max(n_shards, 1):
+    if cfg.d_ff % mp or B % n_shards:
         return None  # caller falls back to the auto variant
-    manual = bset | {model_axis}
+    manual = set(kept) | {model_axis}
     T_local = (B // n_shards) * S
     capacity = _capacity(T_local, cfg)
-    bspec = batch_axes if isinstance(batch_axes, str) else tuple(batch_axes)
-    xspec = P(bspec, None, None)
+    xspec = P(kept or None, None, None)
 
     # f32 boundary (XLA-CPU manual-collective constraint, DESIGN.md §10)
     x32 = x.astype(jnp.float32)
@@ -116,11 +126,11 @@ def _moe_apply_manual_tp(p, x, cfg: LMConfig, rules):
                                         capacity, model_axis)
         return out.reshape(Bl, S, D), aux[None]
 
-    out, aux = jax.shard_map(
-        body, mesh=mesh,
+    out, aux = shard_map(
+        body, mesh,
         in_specs=(xspec, pspecs),
         out_specs=(xspec, P(tuple(sorted(manual)))),
-        axis_names=manual, check_vma=False,
+        axis_names=frozenset(manual),
     )(x32, p32)
     return out.astype(x.dtype), jnp.mean(aux)
 
@@ -189,10 +199,8 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg: LMConfig) -> Tuple[jnp.ndarray, jnp.
             return r
 
     mesh = rules.mesh
-    batch_axes = rules.rules.get("batch")
-    manual = set((batch_axes,) if isinstance(batch_axes, str) else tuple(batch_axes or ()))
-    manual = {a for a in manual if mesh.shape[a] > 1} or set()
-    n_shards = int(np.prod([mesh.shape[a] for a in manual])) if manual else 1
+    kept, n_shards = _active_batch_axes(rules, mesh)
+    manual = set(kept)
     if n_shards == 1 or B % n_shards != 0:
         out, aux = _moe_local(x.reshape(B * S, D), p, cfg, _capacity(B * S, cfg))
         return out.reshape(B, S, D), aux
@@ -236,12 +244,11 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg: LMConfig) -> Tuple[jnp.ndarray, jnp.
         out, aux = _moe_local(xl.reshape(Bl * S, D), full, cfg, capacity)
         return out.reshape(Bl, S, D), aux[None]
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body,
-        mesh=mesh,
+        mesh,
         in_specs=(xspec, jax.tree.map(lambda _: P(), p32)),
         out_specs=(xspec, P(tuple(sorted(manual)))),
-        axis_names=manual,
-        check_vma=False,
+        axis_names=frozenset(manual),
     )(x, p32)
     return out, jnp.mean(aux)

@@ -6,6 +6,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.data.synthetic import SyntheticCifar, TokenStream
 from repro.dist.api import ShardingRules, constrain, use_rules
+from repro.dist.compat import make_mesh
 from repro.dist.sharding import ShardFlags, make_rules, param_specs
 
 
@@ -47,8 +48,7 @@ def test_token_stream_markov_structure():
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_rules_spec_and_dedupe():
@@ -81,8 +81,7 @@ def test_param_specs_patterns():
 def test_param_specs_full_config_divisible():
     from repro.configs import registry
     from repro.models import lm
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
 
     class FakeMesh:
         shape = {"data": 16, "model": 16}

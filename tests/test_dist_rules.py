@@ -1,0 +1,205 @@
+"""Unit tests for the repro.dist subsystem beyond what
+test_data_sharding.py asserts: ShardingRules.spec edge cases (unknown
+axes, tuple rules, dedupe), divisibility fallback, the use_rules context,
+and the batch/cache spec derivers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.api import (ShardingRules, axes_size, constrain,
+                            current_rules, divisible_spec, use_rules)
+from repro.dist.compat import make_mesh
+from repro.dist.sharding import (ShardFlags, batch_specs, cache_specs,
+                                 make_rules, to_shardings)
+
+
+def _mesh():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+class FakeMesh:
+    """axes_size/divisible_spec only consult ``mesh.shape``."""
+    shape = {"data": 4, "model": 2}
+
+
+# ---------------------------------------------------------------------------
+# ShardingRules.spec
+# ---------------------------------------------------------------------------
+
+def test_spec_unknown_axis_replicates():
+    rules = ShardingRules(mesh=_mesh(), rules={"batch": "data"})
+    assert rules.spec("nonesuch", "batch") == P(None, "data")
+    assert rules.spec(None, "batch", None) == P(None, "data", None)
+
+
+def test_spec_preserves_tuple_and_string_forms():
+    rules = ShardingRules(mesh=_mesh(),
+                          rules={"batch": ("pod", "data"), "heads": "model"})
+    assert rules.spec("batch", "heads") == P(("pod", "data"), "model")
+
+
+def test_spec_dedupes_across_dims_first_wins():
+    rules = ShardingRules(mesh=_mesh(), rules={"a": "model", "b": "model"})
+    assert rules.spec("a", "b") == P("model", None)
+    assert rules.spec("b", "a") == P("model", None)
+
+
+def test_spec_dedupes_tuple_overlap_keeps_remainder():
+    rules = ShardingRules(mesh=_mesh(),
+                          rules={"x": ("data", "model"), "y": "model"})
+    assert rules.spec("y", "x") == P("model", ("data",))
+    # fully-consumed tuple comes out replicated, not an empty tuple
+    rules2 = ShardingRules(mesh=_mesh(), rules={"x": ("model",), "y": "model"})
+    assert rules2.spec("y", "x") == P("model", None)
+
+
+def test_spec_dedupes_within_one_tuple():
+    rules = ShardingRules(mesh=_mesh(), rules={"z": ("data", "data")})
+    assert rules.spec("z") == P(("data",))
+
+
+def test_spec_ignores_boolean_strategy_flags():
+    rules = ShardingRules(mesh=_mesh(),
+                          rules={"moe_manual_tp": True, "batch": "data"})
+    assert rules.spec("moe_manual_tp", "batch") == P(None, "data")
+
+
+# ---------------------------------------------------------------------------
+# Divisibility fallback
+# ---------------------------------------------------------------------------
+
+def test_axes_size():
+    assert axes_size(FakeMesh, None) == 1
+    assert axes_size(FakeMesh, "data") == 4
+    assert axes_size(FakeMesh, ("data", "model")) == 8
+
+
+def test_divisible_spec_replicates_indivisible_dims():
+    assert divisible_spec(P("data", "model"), (8, 3), FakeMesh) == P("data", None)
+    assert divisible_spec(P(("data", "model"),), (16,), FakeMesh) == P(("data", "model"),)
+    assert divisible_spec(P(("data", "model"),), (12,), FakeMesh) == P(None)
+    # spec longer than rank: extra entries replicate instead of erroring
+    assert divisible_spec(P("data", "model"), (8,), FakeMesh) == P("data", None)
+
+
+# ---------------------------------------------------------------------------
+# use_rules / constrain
+# ---------------------------------------------------------------------------
+
+def test_constrain_identity_without_rules():
+    x = jnp.ones((4, 6))
+    assert current_rules() is None
+    assert constrain(x, "batch", "embed") is x
+
+
+def test_constrain_noop_under_none_rules():
+    x = jnp.ones((4,))
+    with use_rules(None):
+        assert constrain(x, "batch") is x
+
+
+def test_use_rules_nesting_restores_outer():
+    outer = ShardingRules(mesh=_mesh(), rules={"batch": "data"})
+    inner = ShardingRules(mesh=_mesh(), rules={"batch": "model"})
+    with use_rules(outer):
+        assert current_rules() is outer
+        with use_rules(inner):
+            assert current_rules() is inner
+        assert current_rules() is outer
+    assert current_rules() is None
+
+
+def test_use_rules_pops_on_exception():
+    rules = ShardingRules(mesh=_mesh(), rules={})
+    with pytest.raises(RuntimeError):
+        with use_rules(rules):
+            raise RuntimeError("boom")
+    assert current_rules() is None
+
+
+def test_constrain_applies_and_preserves_values():
+    rules = make_rules(_mesh(), "train", ShardFlags())
+    x = jnp.arange(12.0).reshape(4, 3)
+    with use_rules(rules):
+        y = constrain(x, "batch", "embed")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_constrain_rejects_rank_mismatch():
+    rules = make_rules(_mesh(), "train", ShardFlags())
+    with use_rules(rules):
+        with pytest.raises(ValueError):
+            constrain(jnp.ones((4,)), "batch", "seq")
+
+
+def test_constrain_inside_jit_compiles():
+    rules = make_rules(_mesh(), "train", ShardFlags())
+
+    def f(x):
+        return constrain(x, "batch", "embed") * 2.0
+
+    with use_rules(rules):
+        out = jax.jit(f)(jnp.ones((4, 3)))
+    np.testing.assert_array_equal(np.asarray(out), 2.0 * np.ones((4, 3)))
+
+
+# ---------------------------------------------------------------------------
+# make_rules / batch_specs / cache_specs / to_shardings
+# ---------------------------------------------------------------------------
+
+def test_make_rules_flags_and_modes():
+    mesh = _mesh()
+    base = make_rules(mesh, "train", ShardFlags())
+    assert base.rules["batch"] == ("data",)
+    assert base.rules["heads"] == "model" and base.rules["fsdp"] == "data"
+    assert base.rules["seq"] is None and "moe_manual_tp" not in base.rules
+
+    sp = make_rules(mesh, "train", ShardFlags(sp=True))
+    assert sp.rules["seq"] == "model"
+    assert make_rules(mesh, "decode", ShardFlags(sp=True)).rules["seq"] is None
+
+    off = make_rules(mesh, "train", ShardFlags(fsdp=False, tp=False))
+    assert off.rules["fsdp"] is None and off.rules["heads"] is None
+
+    moe = make_rules(mesh, "train", ShardFlags(moe_manual_tp=True))
+    assert moe.rules["moe_manual_tp"] is True
+
+    with pytest.raises(ValueError):
+        make_rules(mesh, "sideways", ShardFlags())
+
+
+def test_batch_specs_layout_and_none_passthrough():
+    rules = make_rules(_mesh(), "train", ShardFlags())
+    batch = {"tokens": jnp.zeros((8, 16), jnp.int32),
+             "embeds": None,
+             "scalar": jnp.zeros(())}
+    specs = batch_specs(batch, rules)
+    assert specs["tokens"] == P(("data",), None)
+    assert specs["embeds"] is None
+    assert specs["scalar"] == P()
+    shardings = to_shardings(specs, rules.mesh)
+    assert shardings["embeds"] is None
+    assert shardings["tokens"].spec == P(("data",), None)
+
+
+def test_cache_specs_kv_and_state_layouts():
+    rules = make_rules(_mesh(), "decode", ShardFlags(state_shard=True))
+    caches = {
+        "k": jnp.zeros((2, 8, 32, 4, 16)),       # (L,B,W,Kv,hd)
+        "v": jnp.zeros((2, 8, 32, 4, 16)),
+        "pos": jnp.zeros((2, 8, 32), jnp.int32),  # (L,B,W)
+        "mamba": {"ssm": jnp.zeros((3, 2, 8, 4, 8, 16)),   # (...,B,H,N,P)
+                  "conv": jnp.zeros((3, 2, 8, 3, 64))},    # (...,B,K-1,C)
+        "slstm": {"m": jnp.zeros((3, 8, 4, 16))},          # (G,B,H,hd)
+    }
+    specs = cache_specs(caches, rules)
+    assert specs["k"] == P(None, ("data",), None, "model", None)
+    assert specs["pos"] == P(None, ("data",), None)
+    assert specs["mamba"]["ssm"] == P(None, None, ("data",), "model", None, None)
+    assert specs["mamba"]["conv"] == P(None, None, ("data",), None, "model")
+    assert specs["slstm"]["m"] == P(None, ("data",), "model", None)
+    # without the flag, feature dims replicate
+    plain = cache_specs(caches, make_rules(_mesh(), "decode", ShardFlags()))
+    assert plain["k"] == P(None, ("data",), None, None, None)

@@ -67,9 +67,9 @@ SUBPROC = textwrap.dedent("""
     import repro.configs.shapes as SHP
     from repro.dist import sharding as SH
     from repro.dist.api import use_rules
+    from repro.dist.compat import make_mesh
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     SHP.SHAPES["t_train"] = SHP.ShapeSpec("t_train", 64, 8, "train")
     SHP.SHAPES["t_decode"] = SHP.ShapeSpec("t_decode", 64, 8, "decode")
     results = {}

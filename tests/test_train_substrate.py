@@ -154,9 +154,9 @@ def test_checkpoint_atomic_no_partial_dirs(tmp_path):
 
 def test_elastic_restore_replicates(tmp_path):
     from repro.dist.api import ShardingRules
+    from repro.dist.compat import make_mesh
     from repro.train.elastic import restore_elastic
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     rules = ShardingRules(mesh=mesh, rules={"batch": "data"})
     tree = {"w": jnp.ones((4, 4))}
     CKPT.save(str(tmp_path), 3, tree)
