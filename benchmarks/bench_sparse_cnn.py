@@ -1,0 +1,126 @@
+"""Executed group sparsity: HAPM masks through the Pallas block-sparse
+kernel. Sweeps group sparsity 0/25/50/75 % on the paper's CNN (reduced),
+and for each level reports dense-vs-sparse *dispatched grid steps*, wall
+clock, parity vs the dense path, and the cycle model's DSB prediction for
+the same masks — the paper's Table II loop as an executed measurement,
+not just a priced one. Emits ``BENCH_sparse_cnn.json`` at the repo root
+(uploaded as a CI artifact: the perf trajectory).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.accel import BOARDS, simulate
+from repro.core import (HAPMConfig, apply_masks, hapm_element_masks,
+                        hapm_epoch_update, hapm_init)
+from repro.models import cnn
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(ROOT, "BENCH_sparse_cnn.json")
+
+SWEEP = (0.0, 0.25, 0.5, 0.75)
+
+
+def _timed(fn, *a, reps=3):
+    fn(*a)[0].block_until_ready()            # warmup / compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*a)
+    out[0].block_until_ready()
+    return out, (time.time() - t0) / reps
+
+
+def run(args=None) -> dict:
+    fast = bool(getattr(args, "fast", False))
+    print("=" * 72)
+    print("group-sparse CNN inference through the Pallas DSB kernel")
+    print("=" * 72)
+    n_cu = 4
+    batch = 2 if fast else 4
+    cfg = cnn.ResNetConfig(stages=(1, 1), widths=(8, 16), image_size=16)
+    params, state = cnn.init(jax.random.PRNGKey(0), cfg)
+    # equal per-layer weight scale so the *global* HAPM sort spreads groups
+    # across layers (isolates the kernel measurement from init-scale skew)
+    params = jax.tree_util.tree_map_with_path(
+        lambda p, l: l / jnp.std(l) * 0.1 if cnn.is_conv_weight(p, l) else l,
+        params)
+    specs = cnn.conv_group_specs(params, n_cu)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (batch, 16, 16, 3))
+    accel = dataclasses.replace(BOARDS["zedboard_100mhz_72dsp"], n_cu=n_cu)
+
+    dense_apply = jax.jit(lambda p, s, xx: cnn.apply(p, s, xx, cfg))
+    rows = []
+    print(f"\n{'target':>7} {'steps exec/dense':>18} {'ratio':>6} "
+          f"{'dsb cycles':>10} {'dense ms':>9} {'sparse ms':>10} {'max err':>9}")
+    for target in SWEEP:
+        hcfg = HAPMConfig(target, 1)
+        st = hapm_init(specs, hcfg)
+        if target > 0:
+            st = hapm_epoch_update(st, specs, params, hcfg)
+        pruned = apply_masks(params, hapm_element_masks(specs, st))
+
+        exec_ = cnn.build_sparse_execution(pruned, n_cu=n_cu, specs=specs,
+                                           group_masks=st.group_masks)
+        executed, dense = exec_.step_counts(cfg, batch=batch)
+        # exactness of the bridge: per layer, the grid's live tiles ARE the
+        # cycle model's live (g, f_block) schedule steps — same count
+        for keys, plan in exec_.plans.items():
+            gm_layer = np.asarray(cnn._get_path(st.group_masks, keys))
+            assert int(plan.cnt.sum()) == int((gm_layer > 0).sum()), keys
+        (ref, _), t_dense = _timed(dense_apply, pruned, state, x)
+        sparse_apply = jax.jit(
+            lambda p, s, xx, e=exec_: cnn.apply(p, s, xx, cfg, sparse=e))
+        (out, _), t_sparse = _timed(sparse_apply, pruned, state, x)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        rep = simulate(pruned, state, cfg, accel)
+        row = {
+            "target_group_sparsity": target,
+            "executed_grid_steps": executed,
+            "dense_grid_steps": dense,
+            "grid_step_ratio": executed / dense,
+            "dsb_cycle_ratio": rep.dsb_cycle_ratio,
+            "wall_dense_ms": t_dense * 1e3,
+            "wall_sparse_ms": t_sparse * 1e3,
+            "max_err_vs_dense": err,
+            "dense_fallback_layers": sum(v is None for v in exec_.table.values()),
+        }
+        rows.append(row)
+        print(f"{target:>7.2f} {executed:>8}/{dense:<9} {row['grid_step_ratio']:>6.3f} "
+              f"{row['dsb_cycle_ratio']:>10.3f} {t_dense*1e3:>9.2f} "
+              f"{t_sparse*1e3:>10.2f} {err:>9.2e}")
+        assert err < 1e-4, f"sparse path diverged from dense at {target}"
+
+    # both the executed grid and the priced FPGA schedule shrink
+    # monotonically with group sparsity (network totals weight layers
+    # differently — per-step FPGA cycles vs M-row blocks — so only the
+    # per-layer step counts, asserted above, are exactly equal)
+    for a, b in zip(rows, rows[1:]):
+        assert b["grid_step_ratio"] <= a["grid_step_ratio"] + 1e-9
+        assert b["dsb_cycle_ratio"] <= a["dsb_cycle_ratio"] + 1e-9
+    at50 = next(r for r in rows if r["target_group_sparsity"] == 0.5)
+    assert at50["grid_step_ratio"] <= 0.6, at50
+
+    out = {"config": {"n_cu": n_cu, "batch": batch, "fast": fast,
+                      "stages": cfg.stages, "widths": cfg.widths,
+                      "image_size": cfg.image_size},
+           "rows": rows}
+    with open(OUT_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\nwrote {OUT_JSON}")
+    print("dispatched grid steps shrink with group sparsity alongside the "
+          "cycle model's DSB prediction (per-layer step counts are equal; "
+          "network totals weight layers differently): the paper's speedup, "
+          "executed. Wall clock on CPU runs the kernel in interpret mode — "
+          "step counts are the hardware-meaningful column there.")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -5,6 +5,7 @@ One module per paper table/figure:
   bench_training         — Table I + Fig. 3
   bench_inference        — Table II + Fig. 6 + Fig. 4
   bench_blocksparse      — beyond-paper TPU tile-HAPM kernel
+  bench_sparse_cnn       — executed group-sparse CNN inference (DSB kernel)
   bench_roofline         — assignment roofline table (reads dryrun_results.json)
 """
 from __future__ import annotations
@@ -15,13 +16,14 @@ import time
 import traceback
 
 from . import (bench_blocksparse, bench_cycle_model, bench_inference,
-               bench_roofline, bench_training)
+               bench_roofline, bench_sparse_cnn, bench_training)
 
 ALL = {
     "cycle_model": bench_cycle_model,
     "training": bench_training,
     "inference": bench_inference,
     "blocksparse": bench_blocksparse,
+    "sparse_cnn": bench_sparse_cnn,
     "roofline": bench_roofline,
 }
 

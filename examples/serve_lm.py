@@ -19,14 +19,17 @@ from repro.models import lm
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-9b")
+    # BooleanOptionalAction: --no-smoke selects the full config
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction, default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
     args = ap.parse_args(argv)
 
-    cfg = registry.get(args.arch).smoke
+    cfg = registry.config_for(args.arch, smoke=args.smoke)
     params = lm.init(jax.random.PRNGKey(0), cfg)
-    print(f"serving {args.arch} (smoke config: {cfg.num_layers}L d={cfg.d_model})")
+    label = "smoke" if args.smoke else "full"
+    print(f"serving {args.arch} ({label} config: {cfg.num_layers}L d={cfg.d_model})")
 
     B, P, T = args.batch, args.prompt_len, args.tokens
     max_len = P + T

@@ -18,6 +18,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from repro.accel import BOARDS, simulate
 from repro.core.masks import global_sparsity
 from repro.data.synthetic import SyntheticCifar
+from repro.models import cnn
 
 from benchmarks import cnn_training as CT
 
@@ -57,6 +58,23 @@ def main(argv=None):
         print(f"  {name:>24}: int8 {r2.mean_time_per_image_s*1e3:6.2f} ms -> "
               f"HAPM {r4.mean_time_per_image_s*1e3:6.2f} ms "
               f"({r2.mean_time_per_image_s/r4.mean_time_per_image_s:.2f}x)")
+
+    # --- execute the pruning through the Pallas DSB kernel ----------------
+    # (interpret mode on CPU; plans come from the pruned weights' zero
+    #  slabs, at the same n_cu=12 granularity as the board being compared)
+    print("\nexecuted sparse inference (block-sparse Pallas path):")
+    board12 = BOARDS["zedboard_100mhz_72dsp"]          # n_cu = 12
+    r12 = simulate(m4.params, m4.state, m4.cfg, board12)
+    exec_ = cnn.build_sparse_execution(m4.params, n_cu=board12.n_cu)
+    small = imgs[:2]
+    dense_logits, _ = cnn.apply(m4.params, m4.state, small, m4.cfg)
+    sparse_logits, _ = cnn.apply(m4.params, m4.state, small, m4.cfg, sparse=exec_)
+    err = float(jnp.max(jnp.abs(sparse_logits - dense_logits)))
+    executed, dense_steps = exec_.step_counts(m4.cfg, batch=1)
+    print(f"  dispatched grid steps/image: {executed}/{dense_steps} "
+          f"({executed / dense_steps:.2f} of dense) | "
+          f"DSB cycle ratio {r12.dsb_cycle_ratio:.2f} | "
+          f"max |sparse - dense| = {err:.2e}")
 
 
 if __name__ == "__main__":

@@ -105,9 +105,12 @@ def dsb_cycles(
 ) -> int:
     """Cycles with the Dynamic Sparsity Bypass.
 
-    ``group_mask``: (n_if * ratio,) {0,1} from ``core.fpga_conv_groups``
-    ordering (cin-major, f_block-minor) — zero entries are skipped schedule
-    steps. ``data_col_nonzero_frac``: fraction of streamed data columns with
+    ``group_mask``: (n_if * ratio,) {0,1} in ``core.fpga_conv_groups``
+    ordering — flat group id = ``g * n_fblocks + f_block`` with ``g`` the
+    input channel (``groups.py`` / ``scheduler.schedule_step_trace``; note
+    the *schedule* executes f_block-outer, g-inner, so execution order and
+    id order differ — only the skipped-step count matters here). Zero
+    entries are skipped schedule steps. ``data_col_nonzero_frac``: fraction of streamed data columns with
     at least one non-zero value (activation-side bypass; measured by the
     functional simulator, ~1.0 for dense activations).
     """

@@ -21,6 +21,7 @@ import numpy as np
 from ..core import quant as Q
 from ..core.groups import fpga_conv_groups
 from ..models import cnn
+from ..sparse.conv_plan import conv_gemm_layout
 from .config import AcceleratorConfig
 from .cycle_model import NetworkCycles, network_cycles
 
@@ -37,6 +38,21 @@ class SimulationReport:
     gops_paper_convention: float
     group_sparsity_per_layer: dict
     data_col_nonzero_frac: dict
+    # Executed TPU dispatch accounting: per-image Pallas grid steps the
+    # block-sparse conv path actually dispatches for the same group masks
+    # the cycle model prices (sparse.conv_plan layout; dead tiles == skipped
+    # (g, f_block) schedule steps by construction).
+    grid_steps_per_layer: dict = dataclasses.field(default_factory=dict)
+    executed_grid_steps: int = 0
+    dense_grid_steps: int = 0
+
+    @property
+    def grid_step_ratio(self) -> float:
+        return self.executed_grid_steps / max(self.dense_grid_steps, 1)
+
+    @property
+    def dsb_cycle_ratio(self) -> float:
+        return self.cycles.total_dsb / max(self.cycles.total_min, 1)
 
     def row(self) -> dict:
         return {
@@ -48,6 +64,10 @@ class SimulationReport:
             "mean_time_per_image_ms": self.mean_time_per_image_s * 1e3,
             "gops": self.gops,
             "gops_paper_convention": self.gops_paper_convention,
+            "executed_grid_steps": self.executed_grid_steps,
+            "dense_grid_steps": self.dense_grid_steps,
+            "grid_step_ratio": self.grid_step_ratio,
+            "dsb_cycle_ratio": self.dsb_cycle_ratio,
         }
 
 
@@ -84,6 +104,7 @@ def simulate(
 
     # --- group masks from the actual (quantized) weights -------------------
     group_masks, layer_sparsity = [], {}
+    grid_steps, tot_exec, tot_dense = {}, 0, 0
     for path, layer in dims:
         w = Q.quantize(_get(params, path), Q.Q2_5)
         spec = fpga_conv_groups(w.shape, accel.n_cu)
@@ -91,6 +112,14 @@ def simulate(
         gm = (scores > 0).astype(np.float32)          # a group is skippable iff all-zero
         group_masks.append(gm)
         layer_sparsity["/".join(path)] = float(1.0 - gm.mean())
+        # executed Pallas grid steps for the same mask (per image, bm=128):
+        # the kernel's plan visits exactly the live (g, f_block) tiles
+        plan = conv_gemm_layout(spec).plan(gm)
+        mb = -(-layer.out_x * layer.out_y // 128)
+        ex, dn = mb * int(plan.cnt.sum()), mb * plan.tiles[0] * plan.tiles[1]
+        grid_steps["/".join(path)] = {"executed": ex, "dense": dn}
+        tot_exec += ex
+        tot_dense += dn
 
     # --- optional activation-side bypass measurement -----------------------
     data_fracs = [1.0] * len(dims)
@@ -121,6 +150,9 @@ def simulate(
         gops_paper_convention=(ops / 2) / t / 1e9,
         group_sparsity_per_layer=layer_sparsity,
         data_col_nonzero_frac=col_fracs,
+        grid_steps_per_layer=grid_steps,
+        executed_grid_steps=tot_exec,
+        dense_grid_steps=tot_dense,
     )
 
 

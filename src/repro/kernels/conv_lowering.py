@@ -1,0 +1,81 @@
+"""Im2col lowering: an NHWC conv as a ``(M, kx·ky·cin) @ (kx·ky·cin, cout)``
+GEMM, so conv layers can dispatch through the same block-sparse Pallas
+kernel as the LM weights (the TPU Dynamic Sparsity Bypass).
+
+Layout contract: patches are flattened ``(kx, ky, cin)``-major-to-minor,
+matching ``w.reshape(kx*ky*cin, cout)`` for HWIO weights — the order the
+:mod:`repro.sparse.conv_plan` layouts build their K axis from. Padding
+semantics match ``jax.lax.conv_general_dilated`` ("SAME": out = ceil(in/s),
+low pad = total // 2; "VALID": no pad), asserted against the lax oracle in
+``tests/test_sparse_conv.py``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def conv_out_size(n: int, k: int, stride: int, padding: str) -> int:
+    if padding == "SAME":
+        return -(-n // stride)
+    if padding == "VALID":
+        return max((n - k) // stride + 1, 0)
+    raise ValueError(f"padding must be SAME or VALID, got {padding!r}")
+
+
+def same_pads(n: int, k: int, stride: int) -> Tuple[int, int]:
+    """XLA 'SAME' split: low = total // 2 (the extra row/col goes high)."""
+    out = -(-n // stride)
+    total = max((out - 1) * stride + k - n, 0)
+    return total // 2, total - total // 2
+
+
+def im2col_patches(
+    x: jnp.ndarray,            # (B, H, W, C)
+    kx: int,
+    ky: int,
+    stride: int = 1,
+    padding: str = "SAME",
+) -> jnp.ndarray:
+    """-> (B, Ho, Wo, kx, ky, C): the kernel window under every output pixel.
+
+    Built from kx*ky strided slices of the padded input — each slice is the
+    full output grid shifted by one in-window offset, so XLA fuses this into
+    a handful of pads/slices (no gather).
+    """
+    B, H, W, C = x.shape
+    if padding == "SAME":
+        ph, pw = same_pads(H, kx, stride), same_pads(W, ky, stride)
+        x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+    Ho = conv_out_size(H, kx, stride, padding)
+    Wo = conv_out_size(W, ky, stride, padding)
+    slices = [
+        x[:, i:i + (Ho - 1) * stride + 1:stride,
+          j:j + (Wo - 1) * stride + 1:stride, :]
+        for i in range(kx) for j in range(ky)
+    ]
+    p = jnp.stack(slices, axis=3)            # (B, Ho, Wo, kx*ky, C)
+    return p.reshape(B, Ho, Wo, kx, ky, C)
+
+
+def conv_via_matmul(
+    x: jnp.ndarray,            # (B, H, W, Cin)
+    w: jnp.ndarray,            # (kx, ky, Cin, Cout) HWIO
+    stride: int = 1,
+    padding: str = "SAME",
+    matmul: Optional[Callable] = None,
+) -> jnp.ndarray:
+    """Conv as im2col + GEMM. ``matmul(p2d, w2d)`` defaults to a dense f32-
+    accumulating dot (the lowering oracle); pass a bound block-sparse kernel
+    to execute pruning (see ``sparse.conv_plan.make_sparse_conv``, which also
+    repacks both operands onto its padded tile grid)."""
+    kx, ky, cin, cout = w.shape
+    p = im2col_patches(x, kx, ky, stride, padding)
+    B, Ho, Wo = p.shape[:3]
+    p2d = p.reshape(B * Ho * Wo, kx * ky * cin)
+    w2d = w.reshape(kx * ky * cin, cout)
+    if matmul is None:
+        matmul = lambda a, b: jnp.dot(
+            a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+    return matmul(p2d, w2d).reshape(B, Ho, Wo, cout)

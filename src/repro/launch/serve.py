@@ -21,7 +21,9 @@ from ..models import lm
 def main(argv=None):
     ap = argparse.ArgumentParser(description="LM serving driver")
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true", default=True)
+    # BooleanOptionalAction so --no-smoke can actually select the full
+    # config (store_true with default=True could never be disabled)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction, default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=64)

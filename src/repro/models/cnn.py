@@ -117,14 +117,35 @@ def apply(
     x: jnp.ndarray,
     cfg: ResNetConfig,
     train: bool = False,
+    *,
+    sparse: Any = None,
 ) -> Tuple[jnp.ndarray, PyTree]:
     """Forward pass. ``x``: (B, H, W, C) in [0, 1]. Returns (logits, new_state).
 
     Pruning masks are applied to *params* beforehand (``core.apply_masks``),
     keeping this function mask-agnostic.
+
+    ``sparse`` selects the conv execution path:
+      - ``None``/``False``: dense ``lax.conv`` (default);
+      - a :class:`SparseConvExec` (from :func:`build_sparse_execution`):
+        every conv dispatches through the Pallas block-sparse kernel on its
+        bound plan (interpret mode on CPU, compiled on TPU), except layers
+        the builder left dense (density ≈ 1 fallback);
+      - ``True``: build a :class:`SparseConvExec` on the fly from the zero
+        slabs of ``params`` (requires concrete weights — call outside jit;
+        the bound kernels themselves are jitted).
     """
+    sparse = _resolve_sparse(sparse, params)
+
+    def conv(path, h, w, stride):
+        if sparse is not None:
+            fn = sparse.table.get(path)
+            if fn is not None:
+                return fn(h, w, stride)
+        return _conv(h, w, stride)
+
     new_state: dict = {}
-    h = _conv(x, _maybe_qw(params["conv0"]["w"], cfg), 1)
+    h = conv(("conv0", "w"), x, _maybe_qw(params["conv0"]["w"], cfg), 1)
     h, new_state["bn0"] = _bn(h, params["bn0"], state["bn0"], train, cfg)
     h = _maybe_qa(jax.nn.relu(h), cfg)
     for si, n_blocks in enumerate(cfg.stages):
@@ -133,13 +154,13 @@ def apply(
             blk, st = params[name], state[name]
             stride = 2 if (si > 0 and bi == 0) else 1
             ns: dict = {}
-            y = _conv(h, _maybe_qw(blk["conv1"]["w"], cfg), stride)
+            y = conv((name, "conv1", "w"), h, _maybe_qw(blk["conv1"]["w"], cfg), stride)
             y, ns["bn1"] = _bn(y, blk["bn1"], st["bn1"], train, cfg)
             y = _maybe_qa(jax.nn.relu(y), cfg)
-            y = _conv(y, _maybe_qw(blk["conv2"]["w"], cfg), 1)
+            y = conv((name, "conv2", "w"), y, _maybe_qw(blk["conv2"]["w"], cfg), 1)
             y, ns["bn2"] = _bn(y, blk["bn2"], st["bn2"], train, cfg)
             if "proj" in blk:
-                sc = _conv(h, _maybe_qw(blk["proj"]["w"], cfg), stride)
+                sc = conv((name, "proj", "w"), h, _maybe_qw(blk["proj"]["w"], cfg), stride)
                 sc, ns["bnp"] = _bn(sc, blk["bnp"], st["bnp"], train, cfg)
             else:
                 sc = h
@@ -166,6 +187,106 @@ def conv_group_specs(params: PyTree, n_cu: int) -> PyTree:
             return fpga_conv_groups(leaf.shape, n_cu)
         return None
     return jax.tree_util.tree_map_with_path(f, params)
+
+
+def conv_tile_group_specs(params: PyTree, block=(128, 128)) -> PyTree:
+    """TPU-native variant: TpuTileGroupSpec over each conv's 2-D im2col
+    weight matrix (kx*ky*cin, cout) — groups are kernel tiles directly."""
+    from ..core.groups import tpu_tile_groups
+
+    def f(path, leaf):
+        if is_conv_weight(path, leaf):
+            kx, ky, cin, cout = leaf.shape
+            return tpu_tile_groups((kx * ky * cin, cout), block)
+        return None
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def _get_path(tree, keys):
+    node = tree
+    for k in keys:
+        node = node[k]
+    return node
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseConvExec:
+    """Static dispatch table for the group-sparse conv path: conv param path
+    -> bound block-sparse conv (``sparse.conv_plan.make_sparse_conv``), or
+    ``None`` for layers left on the dense ``lax.conv`` fallback. ``plans``
+    keeps every layer's BlockSparsePlan (fallback layers included) for grid-
+    step accounting. Rebuild after HAPM prunes more groups."""
+
+    table: Any                       # {path: conv fn | None}
+    plans: Any                       # {path: BlockSparsePlan}
+    n_cu: int
+
+    def step_counts(self, cfg: ResNetConfig, batch: int = 1, bm: int = 128):
+        """(executed, dense) dispatched grid steps over the whole network —
+        the TPU twin of the cycle model's (skipped vs total) schedule steps.
+        Executed steps per layer = M-row-blocks × live tiles."""
+        executed = dense = 0
+        for path, stride, feat in conv_layer_order(cfg):
+            plan = self.plans[path]
+            out = -(-feat // stride)
+            mb = -(-batch * out * out // bm)
+            executed += mb * int(plan.cnt.sum())
+            dense += mb * plan.tiles[0] * plan.tiles[1]
+        return executed, dense
+
+
+def build_sparse_execution(
+    params: PyTree,
+    *,
+    n_cu: int = 12,
+    specs: PyTree = None,
+    group_masks: PyTree = None,
+    dense_fallback: float = 0.999,
+    bm: int = 128,
+) -> SparseConvExec:
+    """Bind every conv layer to the Pallas block-sparse kernel.
+
+    ``specs``: GroupSpec tree (default: ``conv_group_specs(params, n_cu)``).
+    ``group_masks``: (num_groups,) {0,1} per conv leaf (e.g.
+    ``HAPMState.group_masks``); when ``None``, masks are derived from the
+    weights' zero slabs (``group_scores(w) > 0``), matching the simulator's
+    skippability rule. Layers whose plan density reaches ``dense_fallback``
+    stay on dense ``lax.conv`` (a full grid would only add padding work).
+
+    Host-side: requires concrete weights (plans are numpy); the bound
+    kernels it returns are jitted.
+    """
+    from ..sparse.conv_plan import conv_gemm_layout, make_sparse_conv
+
+    if specs is None:
+        specs = conv_group_specs(params, n_cu)
+    table, plans = {}, {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        if not is_conv_weight(path, leaf):
+            continue
+        keys = tuple(getattr(k, "key", str(k)) for k in path)
+        spec = _get_path(specs, keys)
+        gm = None if group_masks is None else _get_path(group_masks, keys)
+        if gm is None:
+            # tile specs score the 2-D im2col matrix, not the HWIO tensor
+            w2 = leaf.reshape(spec.shape) if leaf.shape != spec.shape else leaf
+            gm = np.asarray(spec.group_scores(w2)) > 0
+        layout = conv_gemm_layout(spec)
+        plan = layout.plan(gm)
+        plans[keys] = plan
+        table[keys] = (None if plan.density >= dense_fallback
+                       else make_sparse_conv(layout, gm, bm=bm))
+    return SparseConvExec(table=table, plans=plans, n_cu=n_cu)
+
+
+def _resolve_sparse(sparse, params) -> Optional[SparseConvExec]:
+    if sparse is None or sparse is False:
+        return None
+    if sparse is True:
+        return build_sparse_execution(params)
+    if isinstance(sparse, SparseConvExec):
+        return sparse
+    raise TypeError(f"sparse must be None/bool/SparseConvExec, got {type(sparse)}")
 
 
 def conv_layer_order(cfg: ResNetConfig):

@@ -1,0 +1,181 @@
+"""HAPM group masks -> BlockSparsePlan over the im2col weight matrix.
+
+This is where the paper's schedule groups meet the Pallas grid: a conv is
+lowered to ``patches @ W`` (:mod:`repro.kernels.conv_lowering`) and the
+weight matrix is packed onto a tile grid aligned with the pruning groups,
+so every pruned group is a *dead tile* the kernel's dispatch plan never
+visits — compute and HBM→VMEM DMA both skipped, exactly the FPGA DSB's
+skipped (f_block, g) schedule steps hoisted to dispatch time.
+
+Two layouts:
+
+- :class:`FpgaConvGemmLayout` (from ``FpgaConvGroupSpec``): K is channel-
+  major — input channel ``g`` owns rows ``[g*bk, g*bk + kx*ky)`` of one
+  K-tile (``bk = kx*ky`` rounded up to the 8-sublane multiple); N gives each
+  ``f_block`` its own 128-lane tile (``cout`` padded to ``n_fb*n_cu``, each
+  block to 128 lanes). Tiles are therefore *exactly* the paper's (g,
+  f_block) groups: live grid steps == live groups, so the executed step
+  count equals the cycle model's DSB step count by construction. The lane
+  padding trades density for that exactness; a multi-channel/-block packing
+  is the TPU-efficiency extension.
+- :class:`TileConvGemmLayout` (from ``TpuTileGroupSpec`` over the 2-D
+  ``(kx*ky*cin, cout)`` matrix): groups already are kernel tiles; packing
+  is plain zero-padding to the tile multiples.
+
+Both pack zeros into the padding, so packed GEMM == conv for any operand
+values; dead-tile skipping is additionally exact because pruned groups are
+zero slabs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.groups import FpgaConvGroupSpec, GroupSpec, TpuTileGroupSpec
+from .block_mask import BlockSparsePlan, plan_from_tile_mask
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvGemmLayout:
+    """Packing of one conv weight onto the block-sparse kernel's tile grid."""
+
+    spec: GroupSpec
+    block: Tuple[int, int]          # (bk, bn) kernel tile
+    tiles: Tuple[int, int]          # (nKb, nNb)
+
+    @property
+    def k_packed(self) -> int:
+        return self.tiles[0] * self.block[0]
+
+    @property
+    def n_packed(self) -> int:
+        return self.tiles[1] * self.block[1]
+
+    # -- API (implemented by subclasses) -----------------------------------
+    def tile_mask(self, group_mask) -> np.ndarray:
+        """(num_groups,) {0,1} -> (nKb, nNb) bool, host-side."""
+        raise NotImplementedError
+
+    def plan(self, group_mask) -> BlockSparsePlan:
+        return plan_from_tile_mask(self.tile_mask(group_mask), self.block)
+
+    def pack_weight(self, w: jnp.ndarray) -> jnp.ndarray:
+        """(kx, ky, cin, cout) -> (k_packed, n_packed)."""
+        raise NotImplementedError
+
+    def pack_patches(self, patches: jnp.ndarray) -> jnp.ndarray:
+        """(..., kx, ky, cin) im2col patches -> (M, k_packed)."""
+        raise NotImplementedError
+
+    def unpack_output(self, out2d: jnp.ndarray, lead_shape) -> jnp.ndarray:
+        """(M, n_packed) -> (*lead_shape, cout)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class FpgaConvGemmLayout(ConvGemmLayout):
+    def _dims(self):
+        kx, ky, cin, cout = self.spec.shape
+        return kx, ky, cin, cout, self.spec.n_cu, self.spec.n_fblocks
+
+    def tile_mask(self, group_mask) -> np.ndarray:
+        kx, ky, cin, cout, n_cu, n_fb = self._dims()
+        return np.asarray(group_mask).reshape(cin, n_fb) > 0
+
+    def pack_weight(self, w: jnp.ndarray) -> jnp.ndarray:
+        kx, ky, cin, cout, n_cu, n_fb = self._dims()
+        bk, bn = self.block
+        kxky = kx * ky
+        w2 = jnp.transpose(w.reshape(kxky, cin, cout), (1, 0, 2))
+        w2 = jnp.pad(w2, ((0, 0), (0, bk - kxky), (0, n_fb * n_cu - cout)))
+        w2 = w2.reshape(cin, bk, n_fb, n_cu)
+        w2 = jnp.pad(w2, ((0, 0), (0, 0), (0, 0), (0, bn - n_cu)))
+        return w2.reshape(cin * bk, n_fb * bn)
+
+    def pack_patches(self, patches: jnp.ndarray) -> jnp.ndarray:
+        kx, ky, cin, cout, n_cu, n_fb = self._dims()
+        bk, _ = self.block
+        kxky = kx * ky
+        p = patches.reshape(-1, kxky, cin)
+        p = jnp.transpose(p, (0, 2, 1))                   # channel-major K
+        p = jnp.pad(p, ((0, 0), (0, 0), (0, bk - kxky)))
+        return p.reshape(-1, cin * bk)
+
+    def unpack_output(self, out2d: jnp.ndarray, lead_shape) -> jnp.ndarray:
+        kx, ky, cin, cout, n_cu, n_fb = self._dims()
+        _, bn = self.block
+        o = out2d.reshape(-1, n_fb, bn)[:, :, :n_cu]
+        return o.reshape(-1, n_fb * n_cu)[:, :cout].reshape(*lead_shape, cout)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConvGemmLayout(ConvGemmLayout):
+    def tile_mask(self, group_mask) -> np.ndarray:
+        return np.asarray(group_mask).reshape(self.tiles) > 0
+
+    def pack_weight(self, w: jnp.ndarray) -> jnp.ndarray:
+        K, N = self.spec.shape
+        w2 = w.reshape(K, N)
+        return jnp.pad(w2, ((0, self.k_packed - K), (0, self.n_packed - N)))
+
+    def pack_patches(self, patches: jnp.ndarray) -> jnp.ndarray:
+        K, _ = self.spec.shape
+        p = patches.reshape(-1, K)
+        return jnp.pad(p, ((0, 0), (0, self.k_packed - K)))
+
+    def unpack_output(self, out2d: jnp.ndarray, lead_shape) -> jnp.ndarray:
+        _, N = self.spec.shape
+        return out2d[:, :N].reshape(*lead_shape, N)
+
+
+def conv_gemm_layout(spec: GroupSpec, *, bn: int = 128) -> ConvGemmLayout:
+    """Layout for a conv's im2col GEMM, tile grid aligned with ``spec``."""
+    if isinstance(spec, FpgaConvGroupSpec):
+        kx, ky, cin, cout = spec.shape
+        if spec.n_cu > bn:
+            raise ValueError(f"n_cu={spec.n_cu} exceeds the {bn}-lane tile")
+        bk = max(8, _ceil_to(kx * ky, 8))
+        return FpgaConvGemmLayout(spec=spec, block=(bk, bn),
+                                  tiles=(cin, spec.n_fblocks))
+    if isinstance(spec, TpuTileGroupSpec):
+        if len(spec.shape) != 2:
+            raise ValueError("conv tile specs must cover the 2-D im2col "
+                             f"matrix, got shape {spec.shape}")
+        nKb, nNb = spec.tiles
+        return TileConvGemmLayout(spec=spec, block=spec.block, tiles=(nKb, nNb))
+    raise TypeError(f"no conv GEMM layout for {type(spec).__name__}")
+
+
+def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm: int = 128):
+    """Bind the Pallas block-sparse kernel to one conv layer's plan.
+
+    Returns ``conv(x, w, stride=1, padding="SAME") -> (B, Ho, Wo, cout)``
+    computing ``conv(x, w ⊙ expand(group_mask))`` — pruned groups are dead
+    tiles the grid never dispatches. The plan is static: rebind after HAPM
+    prunes more groups (an epoch-boundary event). ``conv.plan`` /
+    ``conv.layout`` expose the dispatch accounting.
+    """
+    from ..kernels import ops
+    from ..kernels.conv_lowering import im2col_patches
+
+    tm = layout.tile_mask(group_mask)
+    plan = plan_from_tile_mask(tm, layout.block)
+    f = ops.make_block_sparse_matmul(plan, tm, bm=bm)
+
+    def conv(x, w, stride: int = 1, padding: str = "SAME"):
+        kx, ky = w.shape[:2]
+        patches = im2col_patches(x, kx, ky, stride, padding)
+        B, Ho, Wo = patches.shape[:3]
+        out2d = f(layout.pack_patches(patches), layout.pack_weight(w))
+        return layout.unpack_output(out2d, (B, Ho, Wo))
+
+    conv.plan = plan
+    conv.layout = layout
+    return conv

@@ -10,8 +10,11 @@ from hypothesis import given, settings, strategies as st
 from repro.accel import AcceleratorConfig, ConvLayerDims, dsb_cycles, min_cycles
 from repro.core import (Q2_5, Q3_4, apply_masks, fpga_conv_groups, quantize,
                         tpu_tile_groups)
+from repro.core.groups import apply_group_mask
 from repro.core.uniform import magnitude_masks
-from repro.sparse.block_mask import plan_from_tile_mask, tile_mask_from_weight
+from repro.sparse.block_mask import (plan_from_tile_mask, tile_mask_from_weight,
+                                     transpose_plan)
+from repro.sparse.conv_plan import conv_gemm_layout
 
 SETTINGS = dict(max_examples=25, deadline=None)
 
@@ -109,6 +112,74 @@ def test_dsb_cycles_monotone_in_mask(nif, ratio_seed):
         gm2[nz[0]] = 0
     c2 = dsb_cycles(layer, accel, gm2)
     assert c2 <= c1 <= min_cycles(layer, accel)
+
+
+@given(nKb=st.integers(1, 6), nNb=st.integers(1, 6), seed=st.integers(0, 99),
+       bk=st.sampled_from([16, 128]), bn=st.sampled_from([32, 128]))
+@settings(**SETTINGS)
+def test_transpose_plan_roundtrip(nKb, nNb, seed, bk, bn):
+    """transpose_plan: cnt/idx consistent with the transposed mask, density
+    invariant, and transposing twice recovers the original plan."""
+    rng = np.random.RandomState(seed)
+    tm = rng.rand(nKb, nNb) < 0.5
+    plan = plan_from_tile_mask(tm, (bk, bn))
+    tp = transpose_plan(plan, tm)
+    assert tp.block == (bn, bk) and tp.tiles == (nNb, nKb)
+    for j in range(nKb):
+        assert set(tp.idx[j, :tp.cnt[j]]) == set(np.nonzero(tm.T[:, j])[0])
+    assert tp.cnt.sum() == plan.cnt.sum() == tm.sum()
+    assert tp.density == pytest.approx(plan.density)
+    back = transpose_plan(tp, tm.T)
+    assert back.block == plan.block and back.tiles == plan.tiles
+    assert back.max_nnz == plan.max_nnz
+    np.testing.assert_array_equal(back.cnt, plan.cnt)
+    np.testing.assert_array_equal(back.idx, plan.idx)
+
+
+@given(kx=st.integers(1, 4), cin=st.integers(1, 5), cout=st.integers(1, 20),
+       n_cu=st.integers(1, 8), seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_apply_group_mask_matches_expand_fpga(kx, cin, cout, n_cu, seed):
+    """The fused tiled-broadcast masking == materialized expand, including
+    ragged remainder f_blocks (n_cu not dividing cout)."""
+    spec = fpga_conv_groups((kx, kx, cin, cout), n_cu)
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(kx, kx, cin, cout).astype(np.float32))
+    gm = jnp.asarray((rng.rand(spec.num_groups) > 0.5).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(apply_group_mask(spec, w, gm)),
+        np.asarray(w * spec.expand(gm)), rtol=1e-6, atol=0)
+
+
+@given(K=st.integers(1, 300), N=st.integers(1, 300), lead=st.integers(0, 3),
+       bk=st.sampled_from([32, 128]), bn=st.sampled_from([32, 128]),
+       seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_apply_group_mask_matches_expand_tpu(K, N, lead, bk, bn, seed):
+    shape = (lead, K, N) if lead else (K, N)
+    spec = tpu_tile_groups(shape, (bk, bn))
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(*shape).astype(np.float32))
+    gm = jnp.asarray((rng.rand(spec.num_groups) > 0.5).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(apply_group_mask(spec, w, gm)),
+        np.asarray(w * spec.expand(gm)), rtol=1e-6, atol=0)
+
+
+@given(kx=st.integers(1, 3), cin=st.integers(1, 5), cout=st.integers(1, 20),
+       n_cu=st.integers(1, 8), seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_conv_plan_tiles_are_groups(kx, cin, cout, n_cu, seed):
+    """FPGA conv GEMM layout: one tile per (g, f_block) group — the plan's
+    live-tile count always equals the live-group count."""
+    spec = fpga_conv_groups((kx, kx, cin, cout), n_cu)
+    rng = np.random.RandomState(seed)
+    gm = (rng.rand(spec.num_groups) > 0.5).astype(np.float32)
+    layout = conv_gemm_layout(spec)
+    plan = layout.plan(gm)
+    assert plan.tiles == (cin, spec.n_fblocks)
+    assert int(plan.cnt.sum()) == int(gm.sum())
+    assert layout.k_packed % 8 == 0 and layout.n_packed % 128 == 0
 
 
 @given(seed=st.integers(0, 99))

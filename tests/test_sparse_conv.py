@@ -1,0 +1,186 @@
+"""Group-sparse conv path vs the ``lax.conv`` oracle (interpret mode).
+
+Sweeps stride, padding, non-tile-aligned ``cin*kx*ky``, remainder ``cout``
+(``n_cu`` not dividing ``cout``), density {0, 0.3, 1.0}, f32/bf16 — and the
+end-to-end ``cnn.apply(..., sparse=...)`` acceptance path on a HAPM-pruned
+tiny ResNet.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (HAPMConfig, apply_masks, fpga_conv_groups,
+                        hapm_element_masks, hapm_epoch_update, hapm_init,
+                        tpu_tile_groups)
+from repro.kernels import conv_lowering as CL
+from repro.models import cnn
+from repro.sparse.conv_plan import conv_gemm_layout, make_sparse_conv
+
+
+def _oracle(x, w, stride, padding):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _group_mask(rng, n, density):
+    if density <= 0.0:
+        return np.zeros(n, np.float32)
+    if density >= 1.0:
+        return np.ones(n, np.float32)
+    gm = (rng.rand(n) < density).astype(np.float32)
+    return gm
+
+
+@pytest.mark.parametrize("stride,padding,kx,H,W", [
+    (1, "SAME", 3, 9, 8),
+    (2, "SAME", 3, 9, 8),      # odd sizes: asymmetric SAME pads
+    (1, "VALID", 3, 7, 7),
+    (2, "VALID", 1, 6, 5),
+    (2, "SAME", 1, 7, 7),
+])
+def test_im2col_lowering_matches_lax_conv(stride, padding, kx, H, W):
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(2, H, W, 5).astype(np.float32))
+    w = jnp.asarray(rng.randn(kx, kx, 5, 7).astype(np.float32))
+    got = CL.conv_via_matmul(x, w, stride, padding)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(_oracle(x, w, stride, padding)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# stride {1,2} x SAME/VALID; cin*kx*ky never a multiple of the K tile;
+# cout = 10 or 9 leaves a remainder f_block (n_cu=4); densities {0, .3, 1}
+CASES = [
+    (1, "SAME", 3, 3, 10, 4, 0.3, jnp.float32),
+    (2, "SAME", 3, 5, 12, 4, 0.3, jnp.float32),
+    (1, "VALID", 3, 4, 10, 4, 0.3, jnp.float32),
+    (2, "VALID", 1, 7, 9, 4, 0.3, jnp.float32),
+    (1, "SAME", 3, 4, 8, 4, 1.0, jnp.float32),   # fully dense plan
+    (2, "SAME", 3, 2, 6, 4, 0.0, jnp.float32),   # fully pruned -> zeros
+    (1, "SAME", 3, 3, 10, 4, 0.3, jnp.bfloat16),
+    (2, "SAME", 3, 5, 9, 4, 0.3, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("stride,padding,kx,cin,cout,n_cu,density,dtype", CASES)
+def test_sparse_conv_parity(stride, padding, kx, cin, cout, n_cu, density, dtype):
+    rng = np.random.RandomState(hash((stride, kx, cin, cout)) % 2**31)
+    spec = fpga_conv_groups((kx, kx, cin, cout), n_cu)
+    gm = _group_mask(rng, spec.num_groups, density)
+    w = jnp.asarray(rng.randn(kx, kx, cin, cout), dtype)
+    wm = (w * spec.expand(jnp.asarray(gm)).astype(dtype))
+    x = jnp.asarray(rng.randn(2, 9, 8, cin), dtype)
+
+    conv = make_sparse_conv(conv_gemm_layout(spec), gm)
+    out = conv(x, wm, stride, padding)
+    expect = _oracle(x, wm, stride, padding)
+    assert out.shape == expect.shape and out.dtype == expect.dtype
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), rtol=tol, atol=tol)
+    if density == 0.0:
+        assert float(jnp.abs(out).max()) == 0.0
+    # plan == groups, exactly (the bridge's core claim)
+    assert conv.plan.tiles == (cin, spec.n_fblocks)
+    assert int(conv.plan.cnt.sum()) == int(gm.sum())
+
+
+def test_sparse_conv_tile_layout_parity():
+    """TPU-native path: TpuTileGroupSpec over the 2-D im2col matrix."""
+    rng = np.random.RandomState(7)
+    kx, cin, cout = 3, 5, 20
+    spec = tpu_tile_groups((kx * kx * cin, cout), (32, 128))   # ragged K (45)
+    gm = (rng.rand(spec.num_groups) < 0.5).astype(np.float32)
+    w = jnp.asarray(rng.randn(kx, kx, cin, cout).astype(np.float32))
+    wm = w * spec.expand(jnp.asarray(gm)).reshape(w.shape)
+    x = jnp.asarray(rng.randn(2, 9, 8, cin).astype(np.float32))
+    conv = make_sparse_conv(conv_gemm_layout(spec), gm)
+    out = conv(x, wm, 1, "SAME")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(_oracle(x, wm, 1, "SAME")),
+                               rtol=1e-4, atol=1e-4)
+
+
+def _pruned_tiny_resnet(target=0.5, n_cu=4):
+    cfg = cnn.ResNetConfig(stages=(1, 1), widths=(8, 16), image_size=16)
+    params, state = cnn.init(jax.random.PRNGKey(0), cfg)
+    # equal per-layer scale: the global sort then spreads groups across layers
+    params = jax.tree_util.tree_map_with_path(
+        lambda p, l: l / jnp.std(l) * 0.1 if cnn.is_conv_weight(p, l) else l,
+        params)
+    specs = cnn.conv_group_specs(params, n_cu)
+    hcfg = HAPMConfig(target, 1)
+    st = hapm_init(specs, hcfg)
+    st = hapm_epoch_update(st, specs, params, hcfg)
+    pruned = apply_masks(params, hapm_element_masks(specs, st))
+    return cfg, pruned, state, specs, st
+
+
+def test_cnn_apply_sparse_matches_dense():
+    """Acceptance: HAPM-pruned tiny ResNet, sparse == dense within 1e-4 and
+    dispatched grid steps at 50 % group sparsity <= 60 % of dense."""
+    n_cu = 4
+    cfg, pruned, state, specs, st = _pruned_tiny_resnet(0.5, n_cu)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    dense, _ = cnn.apply(pruned, state, x, cfg)
+
+    exec_ = cnn.build_sparse_execution(pruned, n_cu=n_cu, specs=specs,
+                                       group_masks=st.group_masks)
+    sparse, _ = cnn.apply(pruned, state, x, cfg, sparse=exec_)
+    np.testing.assert_allclose(np.asarray(sparse), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
+
+    executed, dense_steps = exec_.step_counts(cfg, batch=2)
+    assert executed / dense_steps <= 0.6
+
+    # sparse=True derives the same plans from the pruned weights' zero slabs
+    auto, _ = cnn.apply(pruned, state, x, cfg, sparse=True)
+    np.testing.assert_allclose(np.asarray(auto), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_cnn_apply_sparse_with_tile_specs():
+    """TPU-native granularity end to end: conv_tile_group_specs over the
+    im2col matrices, plans derived from the pruned weights' zero slabs."""
+    n_cu = 4
+    cfg, pruned, state, _, _ = _pruned_tiny_resnet(0.5, n_cu)
+    tile_specs = cnn.conv_tile_group_specs(pruned, block=(32, 128))
+    exec_ = cnn.build_sparse_execution(pruned, specs=tile_specs)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    dense, _ = cnn.apply(pruned, state, x, cfg)
+    sparse, _ = cnn.apply(pruned, state, x, cfg, sparse=exec_)
+    np.testing.assert_allclose(np.asarray(sparse), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
+    executed, dense_steps = exec_.step_counts(cfg, batch=2)
+    assert executed <= dense_steps
+
+
+def test_cnn_apply_dense_fallback_on_unpruned():
+    """Density ~1 layers stay on lax.conv: identical output, no bound kernel."""
+    cfg = cnn.ResNetConfig(stages=(1,), widths=(8,), image_size=8)
+    params, state = cnn.init(jax.random.PRNGKey(0), cfg)
+    exec_ = cnn.build_sparse_execution(params, n_cu=4)
+    assert all(fn is None for fn in exec_.table.values())
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    dense, _ = cnn.apply(params, state, x, cfg)
+    sparse, _ = cnn.apply(params, state, x, cfg, sparse=exec_)
+    np.testing.assert_array_equal(np.asarray(sparse), np.asarray(dense))
+    executed, dense_steps = exec_.step_counts(cfg)
+    assert executed == dense_steps
+
+
+def test_simulator_reports_grid_steps():
+    """simulate() reports executed grid steps next to the DSB cycles, and
+    per layer the live-tile count equals the cycle model's live-step count."""
+    n_cu = 4
+    cfg, pruned, state, specs, st = _pruned_tiny_resnet(0.5, n_cu)
+    import dataclasses as dc
+    from repro.accel import BOARDS, simulate
+    accel = dc.replace(BOARDS["zedboard_100mhz_72dsp"], n_cu=n_cu)
+    rep = simulate(pruned, state, cfg, accel)
+    assert rep.dense_grid_steps > rep.executed_grid_steps > 0
+    assert 0.0 < rep.grid_step_ratio < 1.0
+    assert 0.0 < rep.dsb_cycle_ratio < 1.0
+    assert set(rep.grid_steps_per_layer) == set(rep.group_sparsity_per_layer)
+    base = simulate(cnn.init(jax.random.PRNGKey(0), cfg)[0], state, cfg, accel)
+    assert base.grid_step_ratio == 1.0
