@@ -1,0 +1,88 @@
+"""CI gate for the executed-sparsity benchmark: fail if the 50 %-group-
+sparsity dispatch ratios in ``BENCH_sparse_cnn.json`` regress above the
+committed baseline (``benchmarks/sparse_cnn_baseline.json``).
+
+Ratios are deterministic given the bench config (M-row blocks scale
+linearly with batch, so they cancel), which makes this a hard gate rather
+than a noisy perf bound; wall-clock columns are intentionally NOT gated
+(CI machines vary). Refresh the baseline on purposeful layout changes:
+
+    PYTHONPATH=src python -m benchmarks.check_sparse_regression --update
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(ROOT, "BENCH_sparse_cnn.json")
+BASELINE_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "sparse_cnn_baseline.json")
+TARGET = 0.5
+TOL = 1e-6
+
+# key -> direction: "max" = current must not exceed baseline (ratios where
+# smaller is better), "min" = current must not fall below (speedup factors)
+GATES = {
+    "grid_step_ratio": "max",                 # packed layout dispatch ratio
+    "pergroup_grid_step_ratio": "max",        # PR-2 layout dispatch ratio
+    "packed_vs_pergroup_step_cut": "min",     # packed must keep its step win
+    "schedule_step_ratio": "max",             # paper-granularity live steps
+}
+
+
+def _row_at(report: dict, target: float) -> dict:
+    for row in report["rows"]:
+        if row["target_group_sparsity"] == target:
+            return row
+    raise SystemExit(f"no row at target_group_sparsity={target} in report")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current bench output")
+    args = ap.parse_args(argv)
+
+    with open(BENCH_JSON) as f:
+        report = json.load(f)
+    row = _row_at(report, TARGET)
+
+    if args.update:
+        baseline = {"config": report["config"], "target_group_sparsity": TARGET,
+                    "gates": {k: row[k] for k in GATES}}
+        with open(BASELINE_JSON, "w") as f:
+            json.dump(baseline, f, indent=2)
+        print(f"wrote {BASELINE_JSON}: {baseline['gates']}")
+        return 0
+
+    with open(BASELINE_JSON) as f:
+        baseline = json.load(f)
+    # batch / fast don't move the gated ratios (M-row blocks cancel)
+    relevant = lambda c: {k: v for k, v in c.items() if k not in ("batch", "fast")}
+    if relevant(baseline["config"]) != relevant(report["config"]):
+        print(f"bench config changed ({report['config']} vs baseline "
+              f"{baseline['config']}) — refresh the baseline with --update",
+              file=sys.stderr)
+        return 1
+
+    failures = []
+    for key, direction in GATES.items():
+        cur, base = row[key], baseline["gates"][key]
+        bad = (cur > base + TOL) if direction == "max" else (cur < base - TOL)
+        mark = "REGRESSED" if bad else "ok"
+        print(f"  {key:>34}: {cur:.6f} (baseline {base:.6f}, {direction}) {mark}")
+        if bad:
+            failures.append(key)
+    if failures:
+        print(f"\nexecuted-sparsity regression at {TARGET:.0%} group "
+              f"sparsity: {failures}", file=sys.stderr)
+        return 1
+    print("\nno executed-sparsity regression vs committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -65,7 +65,10 @@ def main(argv=None):
     print("\nexecuted sparse inference (block-sparse Pallas path):")
     board12 = BOARDS["zedboard_100mhz_72dsp"]          # n_cu = 12
     r12 = simulate(m4.params, m4.state, m4.cfg, board12)
-    exec_ = cnn.build_sparse_execution(m4.params, n_cu=board12.n_cu)
+    # quantized=True: prepack the same Q2.5 weights the dense QAT forward
+    # uses, so the parity check below compares like for like
+    exec_ = cnn.build_sparse_execution(m4.params, n_cu=board12.n_cu,
+                                       quantized=True)
     small = imgs[:2]
     dense_logits, _ = cnn.apply(m4.params, m4.state, small, m4.cfg)
     sparse_logits, _ = cnn.apply(m4.params, m4.state, small, m4.cfg, sparse=exec_)

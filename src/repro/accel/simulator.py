@@ -38,17 +38,30 @@ class SimulationReport:
     gops_paper_convention: float
     group_sparsity_per_layer: dict
     data_col_nonzero_frac: dict
-    # Executed TPU dispatch accounting: per-image Pallas grid steps the
-    # block-sparse conv path actually dispatches for the same group masks
-    # the cycle model prices (sparse.conv_plan layout; dead tiles == skipped
-    # (g, f_block) schedule steps by construction).
+    # Executed TPU dispatch accounting for the same group masks the cycle
+    # model prices, on BOTH tile layouts (sparse.conv_plan): the one-group-
+    # per-tile layout (dead tiles == skipped (g, f_block) schedule steps by
+    # construction) and the packed MXU-shaped layout (what the hardware
+    # actually dispatches — tiles cover many groups, accounting via per-tile
+    # occupancy). schedule_steps_* is the layout-independent paper
+    # granularity and equals the cycle model's DSB step count.
     grid_steps_per_layer: dict = dataclasses.field(default_factory=dict)
     executed_grid_steps: int = 0
     dense_grid_steps: int = 0
+    packed_executed_grid_steps: int = 0
+    packed_dense_grid_steps: int = 0
+    schedule_steps_live: int = 0
+    schedule_steps_total: int = 0
+    padded_mac_utilization: float = 0.0      # packed layout, dispatched tiles
+    pergroup_mac_utilization: float = 0.0    # one-group-per-tile layout
 
     @property
     def grid_step_ratio(self) -> float:
         return self.executed_grid_steps / max(self.dense_grid_steps, 1)
+
+    @property
+    def packed_grid_step_ratio(self) -> float:
+        return self.packed_executed_grid_steps / max(self.packed_dense_grid_steps, 1)
 
     @property
     def dsb_cycle_ratio(self) -> float:
@@ -67,6 +80,13 @@ class SimulationReport:
             "executed_grid_steps": self.executed_grid_steps,
             "dense_grid_steps": self.dense_grid_steps,
             "grid_step_ratio": self.grid_step_ratio,
+            "packed_executed_grid_steps": self.packed_executed_grid_steps,
+            "packed_dense_grid_steps": self.packed_dense_grid_steps,
+            "packed_grid_step_ratio": self.packed_grid_step_ratio,
+            "schedule_steps_live": self.schedule_steps_live,
+            "schedule_steps_total": self.schedule_steps_total,
+            "padded_mac_utilization": self.padded_mac_utilization,
+            "pergroup_mac_utilization": self.pergroup_mac_utilization,
             "dsb_cycle_ratio": self.dsb_cycle_ratio,
         }
 
@@ -105,6 +125,9 @@ def simulate(
     # --- group masks from the actual (quantized) weights -------------------
     group_masks, layer_sparsity = [], {}
     grid_steps, tot_exec, tot_dense = {}, 0, 0
+    pk_exec = pk_dense = sched_live = sched_total = 0
+    util_num = {"packed": 0.0, "pergroup": 0.0}
+    util_den = {"packed": 0.0, "pergroup": 0.0}
     for path, layer in dims:
         w = Q.quantize(_get(params, path), Q.Q2_5)
         spec = fpga_conv_groups(w.shape, accel.n_cu)
@@ -112,14 +135,31 @@ def simulate(
         gm = (scores > 0).astype(np.float32)          # a group is skippable iff all-zero
         group_masks.append(gm)
         layer_sparsity["/".join(path)] = float(1.0 - gm.mean())
-        # executed Pallas grid steps for the same mask (per image, bm=128):
-        # the kernel's plan visits exactly the live (g, f_block) tiles
-        plan = conv_gemm_layout(spec).plan(gm)
+        # executed Pallas grid steps for the same mask (per image, bm=128),
+        # on both layouts: per-group (live tiles ARE the live (g, f_block)
+        # schedule steps) and packed (the MXU-shaped dispatch the TPU runs)
         mb = -(-layer.out_x * layer.out_y // 128)
+        layouts = {"pergroup": conv_gemm_layout(spec),
+                   "packed": conv_gemm_layout(spec, packed=True)}
+        plan = layouts["pergroup"].plan(gm)
+        plan_pk = layouts["packed"].plan(gm)
         ex, dn = mb * int(plan.cnt.sum()), mb * plan.tiles[0] * plan.tiles[1]
-        grid_steps["/".join(path)] = {"executed": ex, "dense": dn}
+        ex_pk = mb * int(plan_pk.cnt.sum())
+        dn_pk = mb * plan_pk.tiles[0] * plan_pk.tiles[1]
+        occ_live, occ_total = layouts["packed"].tile_occupancy(gm)
+        sched_live += int(occ_live.sum())
+        sched_total += int(occ_total.sum())
+        for kind, lo in layouts.items():
+            live_elems, area = lo.mac_accounting(gm)
+            util_num[kind] += mb * live_elems
+            util_den[kind] += mb * area
+        grid_steps["/".join(path)] = {"executed": ex, "dense": dn,
+                                      "packed_executed": ex_pk,
+                                      "packed_dense": dn_pk}
         tot_exec += ex
         tot_dense += dn
+        pk_exec += ex_pk
+        pk_dense += dn_pk
 
     # --- optional activation-side bypass measurement -----------------------
     data_fracs = [1.0] * len(dims)
@@ -153,6 +193,14 @@ def simulate(
         grid_steps_per_layer=grid_steps,
         executed_grid_steps=tot_exec,
         dense_grid_steps=tot_dense,
+        packed_executed_grid_steps=pk_exec,
+        packed_dense_grid_steps=pk_dense,
+        schedule_steps_live=sched_live,
+        schedule_steps_total=sched_total,
+        padded_mac_utilization=(util_num["packed"] / util_den["packed"]
+                                if util_den["packed"] else 0.0),
+        pergroup_mac_utilization=(util_num["pergroup"] / util_den["pergroup"]
+                                  if util_den["pergroup"] else 0.0),
     )
 
 

@@ -20,7 +20,11 @@ def conv_out_size(n: int, k: int, stride: int, padding: str) -> int:
     if padding == "SAME":
         return -(-n // stride)
     if padding == "VALID":
-        return max((n - k) // stride + 1, 0)
+        if n < k:
+            raise ValueError(
+                f"VALID conv has no output: input size {n} is smaller than "
+                f"kernel size {k}")
+        return (n - k) // stride + 1
     raise ValueError(f"padding must be SAME or VALID, got {padding!r}")
 
 
@@ -45,6 +49,10 @@ def im2col_patches(
     a handful of pads/slices (no gather).
     """
     B, H, W, C = x.shape
+    if padding == "VALID" and (H < kx or W < ky):
+        raise ValueError(
+            f"VALID conv has no output: input (B, H, W, C)={(B, H, W, C)} is "
+            f"smaller than the (kx, ky)={(kx, ky)} kernel window")
     if padding == "SAME":
         ph, pw = same_pads(H, kx, stride), same_pads(W, ky, stride)
         x = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))

@@ -31,19 +31,38 @@ def _pad_rows(x2d: jnp.ndarray, bm: int):
     return x2d, M
 
 
-def make_block_sparse_matmul(plan: BlockSparsePlan, tile_mask: np.ndarray, *, bm: int = 128):
+def make_block_sparse_matmul(plan: BlockSparsePlan, tile_mask: np.ndarray, *,
+                             bm: int = 128, bias=None, relu: bool = False):
     """Build ``f(x, w) -> x @ (w ⊙ mask)`` for a *fixed* pruning plan.
 
     The plan is static (recompiled when HAPM prunes more groups — an
     epoch-boundary event). Backward:
       dx = dy @ (w ⊙ m)^T   — block-sparse with the transposed plan
       dw = (x^T dy) ⊙ m     — dense then tile-masked (dw is dense anyway)
+
+    ``bias`` (a length-N vector in the *packed* column layout) and/or
+    ``relu`` fuse the inference epilogue into the kernel's flush step;
+    that variant is forward-only (no custom VJP) — it exists for the
+    folded-BN inference path, not training.
     """
-    t_plan = transpose_plan(plan, tile_mask)
     idx, cnt = jnp.asarray(plan.idx), jnp.asarray(plan.cnt)
+    block = plan.block
+
+    if bias is not None or relu:
+        b = None if bias is None else jnp.asarray(bias, jnp.float32)
+
+        def f_epilogue(x, w):
+            lead = x.shape[:-1]
+            xp, M = _pad_rows(x.reshape(-1, x.shape[-1]), bm)
+            out = block_sparse_matmul(xp, w, idx, cnt, b, block=block, bm=bm,
+                                      relu=relu, interpret=_interpret())[:M]
+            return out.reshape(*lead, w.shape[1])
+
+        return f_epilogue
+
+    t_plan = transpose_plan(plan, tile_mask)
     t_idx, t_cnt = jnp.asarray(t_plan.idx), jnp.asarray(t_plan.cnt)
     tmask = jnp.asarray(tile_mask)
-    block = plan.block
 
     def _fwd2d(x2d, w):
         xp, M = _pad_rows(x2d, bm)

@@ -129,19 +129,33 @@ def apply(
       - ``None``/``False``: dense ``lax.conv`` (default);
       - a :class:`SparseConvExec` (from :func:`build_sparse_execution`):
         every conv dispatches through the Pallas block-sparse kernel on its
-        bound plan (interpret mode on CPU, compiled on TPU), except layers
-        the builder left dense (density ≈ 1 fallback);
-      - ``True``: build a :class:`SparseConvExec` on the fly from the zero
-        slabs of ``params`` (requires concrete weights — call outside jit;
-        the bound kernels themselves are jitted).
+        bound plan with its *bind-time prepacked* weight (interpret mode on
+        CPU, compiled on TPU), except layers the builder left dense
+        (density ≈ 1 fallback). Build with ``quantized=cfg.quantized`` so
+        the prepacked weights match the dense path's per-call quantization.
+      - ``True``: build a :class:`SparseConvExec` from the zero slabs of
+        ``params`` (requires concrete weights — under jit this raises;
+        prebuild instead). Builds are memoized on the identity of
+        ``params`` so repeated calls don't reconstruct the plan table.
+
+    The sparse path is *inference-only with respect to the conv weights*:
+    bind-time prepacking makes them compile-time constants, so gradients
+    do not flow to ``params`` through sparse-bound layers (``train=True``
+    with ``sparse`` raises; train dense, rebind per epoch).
     """
-    sparse = _resolve_sparse(sparse, params)
+    if train and sparse is not None and sparse is not False:
+        raise ValueError(
+            "sparse execution is inference-only: conv weights are prepacked "
+            "bind-time constants, so training gradients would silently not "
+            "reach params — train with the dense path and rebind the "
+            "SparseConvExec after each HAPM epoch")
+    sparse = _resolve_sparse(sparse, params, cfg.quantized)
 
     def conv(path, h, w, stride):
         if sparse is not None:
             fn = sparse.table.get(path)
             if fn is not None:
-                return fn(h, w, stride)
+                return fn(h, stride=stride)   # weight prepacked at bind time
         return _conv(h, w, stride)
 
     new_state: dict = {}
@@ -212,18 +226,26 @@ def _get_path(tree, keys):
 @dataclasses.dataclass(frozen=True)
 class SparseConvExec:
     """Static dispatch table for the group-sparse conv path: conv param path
-    -> bound block-sparse conv (``sparse.conv_plan.make_sparse_conv``), or
-    ``None`` for layers left on the dense ``lax.conv`` fallback. ``plans``
-    keeps every layer's BlockSparsePlan (fallback layers included) for grid-
-    step accounting. Rebuild after HAPM prunes more groups."""
+    -> bound block-sparse conv (``sparse.conv_plan.make_sparse_conv``, the
+    masked weight prepacked at bind time), or ``None`` for layers left on
+    the dense ``lax.conv`` fallback. ``plans`` keeps every layer's
+    BlockSparsePlan (fallback layers included) for grid-step accounting;
+    ``layouts`` / ``group_masks`` carry the occupancy-based schedule-group
+    accounting that survives multi-group (packed) tiles. Rebuild after HAPM
+    prunes more groups."""
 
     table: Any                       # {path: conv fn | None}
     plans: Any                       # {path: BlockSparsePlan}
     n_cu: int
+    layouts: Any = None              # {path: ConvGemmLayout}
+    group_masks_np: Any = None       # {path: (num_groups,) float}
+    quantized: bool = False          # weights Q2.5-quantized before packing
+    folded: bool = False             # bias/ReLU epilogue fused (apply_folded only)
+    bound_weights: Any = None        # {path: source weight} — staleness check
 
     def step_counts(self, cfg: ResNetConfig, batch: int = 1, bm: int = 128):
         """(executed, dense) dispatched grid steps over the whole network —
-        the TPU twin of the cycle model's (skipped vs total) schedule steps.
+        what the Pallas grid actually visits on *this* exec's tile layout.
         Executed steps per layer = M-row-blocks × live tiles."""
         executed = dense = 0
         for path, stride, feat in conv_layer_order(cfg):
@@ -234,6 +256,69 @@ class SparseConvExec:
             dense += mb * plan.tiles[0] * plan.tiles[1]
         return executed, dense
 
+    def schedule_step_counts(self):
+        """(live, total) paper-granularity (g, f_block) schedule steps over
+        the network, from per-tile group occupancy — layout-independent, so
+        it equals the cycle model's DSB step count even when packed tiles
+        cover many groups."""
+        live = total = 0
+        for path, layout in self.layouts.items():
+            occ_live, occ_total = layout.tile_occupancy(self.group_masks_np[path])
+            live += int(occ_live.sum())
+            total += int(occ_total.sum())
+        return live, total
+
+    def mac_utilization(self, cfg: ResNetConfig, batch: int = 1,
+                        bm: int = 128) -> float:
+        """Network padded-MAC utilization: live weight elements per
+        dispatched tile area, M-block-weighted like ``step_counts``."""
+        num = den = 0.0
+        for path, stride, feat in conv_layer_order(cfg):
+            out = -(-feat // stride)
+            mb = -(-batch * out * out // bm)
+            live_elems, area = self.layouts[path].mac_accounting(
+                self.group_masks_np[path])
+            num += mb * live_elems
+            den += mb * area
+        return num / den if den else 0.0
+
+
+def _bind_conv_layers(tree: PyTree, specs: PyTree, group_masks: PyTree,
+                      n_cu: int, packed: bool, weight_of, bind_one):
+    """Shared bind loop of the two exec builders: walk the conv weights of
+    ``tree``, derive each layer's (spec, group mask, layout, plan), and let
+    ``bind_one(keys, leaf, layout, gm, plan)`` produce the table entry.
+    ``weight_of(leaf)`` is the weight the mask derivation should score
+    (e.g. the Q2.5-quantized view)."""
+    from ..sparse.conv_plan import conv_gemm_layout
+
+    if specs is None:
+        specs = conv_group_specs(tree, n_cu)
+    table, plans, layouts, gms, bound = {}, {}, {}, {}, {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if not is_conv_weight(path, leaf):
+            continue
+        if isinstance(leaf, jax.core.Tracer):
+            raise ValueError(
+                "sparse exec builders need concrete weights (plans are "
+                "host-side numpy) but got a tracer — build the "
+                "SparseConvExec outside jit and pass it via sparse=exec")
+        keys = tuple(getattr(k, "key", str(k)) for k in path)
+        w = weight_of(leaf)
+        spec = _get_path(specs, keys)
+        gm = None if group_masks is None else _get_path(group_masks, keys)
+        if gm is None:
+            # tile specs score the 2-D im2col matrix, not the HWIO tensor
+            w2 = w.reshape(spec.shape) if w.shape != spec.shape else w
+            gm = np.asarray(spec.group_scores(w2)) > 0
+        gm = np.asarray(gm, np.float32)
+        layout = conv_gemm_layout(spec, packed=packed)
+        plan = layout.plan(gm)
+        plans[keys], layouts[keys], gms[keys] = plan, layout, gm
+        bound[keys] = leaf
+        table[keys] = bind_one(keys, w, layout, gm, plan)
+    return table, plans, layouts, gms, bound
+
 
 def build_sparse_execution(
     params: PyTree,
@@ -243,8 +328,11 @@ def build_sparse_execution(
     group_masks: PyTree = None,
     dense_fallback: float = 0.999,
     bm: int = 128,
+    packed: bool = False,
+    quantized: bool = False,
 ) -> SparseConvExec:
-    """Bind every conv layer to the Pallas block-sparse kernel.
+    """Bind every conv layer to the Pallas block-sparse kernel, prepacking
+    the masked (optionally Q2.5-quantized) weight once at bind time.
 
     ``specs``: GroupSpec tree (default: ``conv_group_specs(params, n_cu)``).
     ``group_masks``: (num_groups,) {0,1} per conv leaf (e.g.
@@ -252,39 +340,117 @@ def build_sparse_execution(
     weights' zero slabs (``group_scores(w) > 0``), matching the simulator's
     skippability rule. Layers whose plan density reaches ``dense_fallback``
     stay on dense ``lax.conv`` (a full grid would only add padding work).
+    ``packed``: use the multi-group MXU-shaped tile layout
+    (``conv_gemm_layout(spec, packed=True)``) instead of one tile per
+    (g, f_block) group — far fewer grid steps at the same pruning.
+    ``quantized``: prepack ``Q.quantize(w, Q2_5)`` so the exec matches a
+    ``cfg.quantized`` dense forward.
 
-    Host-side: requires concrete weights (plans are numpy); the bound
-    kernels it returns are jitted.
+    Host-side: requires concrete weights (plans are numpy; raises under
+    jit — prebuild and pass the exec in); the bound kernels are jitted.
+    The exec is pinned to these exact weight arrays — ``apply`` rejects a
+    concrete params tree whose conv leaves differ (rebind after updates).
     """
-    from ..sparse.conv_plan import conv_gemm_layout, make_sparse_conv
+    from ..sparse.conv_plan import make_sparse_conv
 
-    if specs is None:
-        specs = conv_group_specs(params, n_cu)
-    table, plans = {}, {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
-        if not is_conv_weight(path, leaf):
-            continue
-        keys = tuple(getattr(k, "key", str(k)) for k in path)
-        spec = _get_path(specs, keys)
-        gm = None if group_masks is None else _get_path(group_masks, keys)
-        if gm is None:
-            # tile specs score the 2-D im2col matrix, not the HWIO tensor
-            w2 = leaf.reshape(spec.shape) if leaf.shape != spec.shape else leaf
-            gm = np.asarray(spec.group_scores(w2)) > 0
-        layout = conv_gemm_layout(spec)
-        plan = layout.plan(gm)
-        plans[keys] = plan
-        table[keys] = (None if plan.density >= dense_fallback
-                       else make_sparse_conv(layout, gm, bm=bm))
-    return SparseConvExec(table=table, plans=plans, n_cu=n_cu)
+    def bind_one(keys, w, layout, gm, plan):
+        return (None if plan.density >= dense_fallback
+                else make_sparse_conv(layout, gm, bm=bm, weight=w))
+
+    table, plans, layouts, gms, bound = _bind_conv_layers(
+        params, specs, group_masks, n_cu, packed,
+        (lambda l: Q.quantize(l, Q.Q2_5)) if quantized else (lambda l: l),
+        bind_one)
+    return SparseConvExec(table=table, plans=plans, n_cu=n_cu,
+                          layouts=layouts, group_masks_np=gms,
+                          quantized=quantized, bound_weights=bound)
 
 
-def _resolve_sparse(sparse, params) -> Optional[SparseConvExec]:
+def build_sparse_inference(
+    folded: PyTree,
+    cfg: ResNetConfig,
+    *,
+    n_cu: int = 12,
+    specs: PyTree = None,
+    group_masks: PyTree = None,
+    dense_fallback: float = 0.999,
+    bm: int = 128,
+    packed: bool = True,
+) -> SparseConvExec:
+    """Bind BN-folded conv layers (``fold_batchnorm`` output: per-conv
+    ``{"w", "b"}``) to the kernel with the *fused epilogue*: bias add and —
+    where the network applies ReLU directly after BN (conv0 and every
+    block's conv1) — ReLU happen at the kernel's flush step, so folded-BN
+    inference runs entirely inside the kernel. conv2/proj outputs feed the
+    residual add first, so only their bias is fused. Defaults to the
+    packed (MXU-shaped) layout; consume with :func:`apply_folded`.
+    """
+    from ..sparse.conv_plan import make_sparse_conv
+
+    conv_params = {k: v for k, v in folded.items() if k != "fc"}
+
+    def bind_one(keys, w, layout, gm, plan):
+        if plan.density >= dense_fallback:
+            return None
+        bias = _get_path(folded, keys[:-1])["b"]
+        relu = keys[-2] in ("conv0", "conv1")   # ReLU directly after BN
+        return make_sparse_conv(layout, gm, bm=bm, weight=w, bias=bias,
+                                relu=relu)
+
+    table, plans, layouts, gms, bound = _bind_conv_layers(
+        conv_params, specs, group_masks, n_cu, packed, lambda l: l, bind_one)
+    return SparseConvExec(table=table, plans=plans, n_cu=n_cu,
+                          layouts=layouts, group_masks_np=gms, folded=True,
+                          bound_weights=bound)
+
+
+# sparse=True builds are memoized on params identity: the cache holds a
+# strong reference to the keyed params tree, which pins its id() for the
+# lifetime of the entry (bounded — oldest evicted first).
+_SPARSE_EXEC_CACHE: "dict[tuple, tuple]" = {}
+_SPARSE_EXEC_CACHE_MAX = 4
+
+
+def _resolve_sparse(sparse, params, quantized: bool = False) -> Optional[SparseConvExec]:
     if sparse is None or sparse is False:
         return None
     if sparse is True:
-        return build_sparse_execution(params)
+        key = (id(params), quantized)
+        hit = _SPARSE_EXEC_CACHE.get(key)
+        if hit is not None and hit[0] is params:
+            return hit[1]
+        exec_ = build_sparse_execution(params, quantized=quantized)
+        while len(_SPARSE_EXEC_CACHE) >= _SPARSE_EXEC_CACHE_MAX:
+            _SPARSE_EXEC_CACHE.pop(next(iter(_SPARSE_EXEC_CACHE)))
+        _SPARSE_EXEC_CACHE[key] = (params, exec_)
+        return exec_
     if isinstance(sparse, SparseConvExec):
+        if sparse.folded:
+            raise ValueError(
+                "this SparseConvExec fuses the folded-BN bias/ReLU epilogue "
+                "(build_sparse_inference) — apply() would run BN on top of "
+                "it; consume it with apply_folded()")
+        if sparse.quantized != quantized:
+            raise ValueError(
+                f"SparseConvExec prepacked with quantized={sparse.quantized} "
+                f"but cfg.quantized={quantized} — rebuild with "
+                f"build_sparse_execution(..., quantized={quantized})")
+        # staleness guard: the exec's convs compute with the weights packed
+        # at bind time, so a concrete params tree with different conv leaves
+        # would silently be ignored. (Tracers — the jitted path — can't be
+        # identity-checked; the bind-time pin is documented there.)
+        if sparse.bound_weights is not None:
+            for keys, bound in sparse.bound_weights.items():
+                try:
+                    leaf = _get_path(params, keys[:-1])[keys[-1]]
+                except (KeyError, TypeError):
+                    leaf = None
+                if (leaf is not bound and leaf is not None
+                        and not isinstance(leaf, jax.core.Tracer)):
+                    raise ValueError(
+                        f"SparseConvExec is stale for {'/'.join(keys)}: its "
+                        "prepacked bind-time weight is not the array in "
+                        "params — rebuild the exec after weight updates")
         return sparse
     raise TypeError(f"sparse must be None/bool/SparseConvExec, got {type(sparse)}")
 
@@ -356,3 +522,48 @@ def fold_batchnorm(params: PyTree, state: PyTree, cfg: ResNetConfig) -> PyTree:
             folded[name] = out
     folded["fc"] = dict(params["fc"])
     return folded
+
+
+def apply_folded(
+    folded: PyTree,
+    x: jnp.ndarray,
+    cfg: ResNetConfig,
+    *,
+    sparse: Optional[SparseConvExec] = None,
+) -> jnp.ndarray:
+    """Inference on BN-folded params (:func:`fold_batchnorm`): conv → +b →
+    ReLU, no BN state. With ``sparse`` (a :class:`SparseConvExec` from
+    :func:`build_sparse_inference`) every non-fallback conv runs through
+    the block-sparse kernel with the bias/ReLU epilogue *fused at the
+    flush step* — the accelerator's folded-BN execution, in one kernel per
+    layer. Float path (the fixed-point twin lives in ``accel.simulator``);
+    returns logits only.
+    """
+
+    if sparse is not None and not sparse.folded:
+        raise ValueError(
+            "apply_folded needs a folded SparseConvExec (build_sparse_"
+            "inference) — this one has no fused bias/ReLU epilogue, its "
+            "convs would silently drop the folded bias")
+
+    def conv(path, h, stride, relu):
+        fn = sparse.table.get(path) if sparse is not None else None
+        if fn is not None:
+            return fn(h, stride=stride)   # bias/ReLU fused per the builder
+        node = _get_path(folded, path[:-1])
+        y = _conv(h, node["w"], stride) + node["b"]
+        return jax.nn.relu(y) if relu else y
+
+    h = conv(("conv0", "w"), x, 1, relu=True)
+    for si, n_blocks in enumerate(cfg.stages):
+        for bi in range(n_blocks):
+            name = f"s{si}b{bi}"
+            blk = folded[name]
+            stride = 2 if (si > 0 and bi == 0) else 1
+            y = conv((name, "conv1", "w"), h, stride, relu=True)
+            y = conv((name, "conv2", "w"), y, 1, relu=False)
+            sc = (conv((name, "proj", "w"), h, stride, relu=False)
+                  if "proj" in blk else h)
+            h = jax.nn.relu(y + sc)
+    pooled = jnp.mean(h, axis=(1, 2))
+    return pooled @ folded["fc"]["w"] + folded["fc"]["b"]

@@ -7,7 +7,7 @@ so every pruned group is a *dead tile* the kernel's dispatch plan never
 visits — compute and HBM→VMEM DMA both skipped, exactly the FPGA DSB's
 skipped (f_block, g) schedule steps hoisted to dispatch time.
 
-Two layouts:
+Three layouts:
 
 - :class:`FpgaConvGemmLayout` (from ``FpgaConvGroupSpec``): K is channel-
   major — input channel ``g`` owns rows ``[g*bk, g*bk + kx*ky)`` of one
@@ -16,25 +16,44 @@ Two layouts:
   block to 128 lanes). Tiles are therefore *exactly* the paper's (g,
   f_block) groups: live grid steps == live groups, so the executed step
   count equals the cycle model's DSB step count by construction. The lane
-  padding trades density for that exactness; a multi-channel/-block packing
-  is the TPU-efficiency extension.
+  padding trades MAC utilization for that exactness — a 3×3 conv fills
+  only ``9·n_cu / (16·128)`` of each dispatched tile.
+- :class:`PackedFpgaConvGemmLayout` (``conv_gemm_layout(spec,
+  packed=True)``): the TPU-efficiency layout. Each K-tile packs
+  ``bk // ceil8(kx·ky)`` input channels (one 8-aligned row *slot* per
+  channel) and each N-tile packs ``bn // n_cu`` f_blocks, so the tile
+  shape matches the 128-deep MXU datapath instead of one group. A tile is
+  live iff *any* covered (g, f_block) group is live; pruned groups inside
+  a live tile are zero slabs in the packed (masked) weight, so the GEMM
+  stays exact. Paper-granularity accounting survives through
+  :meth:`ConvGemmLayout.tile_occupancy`: every tile records how many live
+  / total schedule groups it covers, so callers can report *both* packed
+  grid steps (what the hardware dispatches) and schedule-group steps
+  (what the cycle model prices) plus the padded-MAC utilization of the
+  dispatched tiles.
 - :class:`TileConvGemmLayout` (from ``TpuTileGroupSpec`` over the 2-D
   ``(kx*ky*cin, cout)`` matrix): groups already are kernel tiles; packing
   is plain zero-padding to the tile multiples.
 
-Both pack zeros into the padding, so packed GEMM == conv for any operand
-values; dead-tile skipping is additionally exact because pruned groups are
-zero slabs.
+All layouts pack zeros into the padding, so packed GEMM == conv for any
+operand values; dead-tile skipping is additionally exact because pruned
+groups are zero slabs in the masked weight.
+
+:func:`make_sparse_conv` binds a layout to the Pallas kernel. Weight
+packing is hoisted to *bind time* — pass ``weight=`` (and optionally a
+folded-BN ``bias=`` / ``relu=`` epilogue, fused into the kernel's flush
+step) and the returned closure only packs im2col patches per call.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.groups import FpgaConvGroupSpec, GroupSpec, TpuTileGroupSpec
+from ..core.groups import (FpgaConvGroupSpec, GroupSpec, TpuTileGroupSpec,
+                           apply_group_mask)
 from .block_mask import BlockSparsePlan, plan_from_tile_mask
 
 
@@ -63,11 +82,41 @@ class ConvGemmLayout:
         """(num_groups,) {0,1} -> (nKb, nNb) bool, host-side."""
         raise NotImplementedError
 
+    def tile_occupancy(self, group_mask) -> Tuple[np.ndarray, np.ndarray]:
+        """(live, total) schedule groups covered per tile, (nKb, nNb) ints.
+
+        ``live.sum()`` is the paper-granularity live-step count (== the
+        cycle model's DSB steps) regardless of how many groups share a
+        tile; for the one-group-per-tile layouts it degenerates to the
+        tile mask itself.
+        """
+        tm = self.tile_mask(group_mask)
+        return tm.astype(np.int64), np.ones_like(tm, np.int64)
+
+    def mac_accounting(self, group_mask) -> Tuple[int, int]:
+        """(live weight elements, dispatched-tile MAC area) for this layer —
+        the single source for padded-MAC utilization (``SparseConvExec`` and
+        ``accel.simulator`` aggregate these over the network)."""
+        live_tiles = int(self.tile_mask(group_mask).sum())
+        gm = np.asarray(group_mask).reshape(-1) > 0
+        live_elems = int((gm * self.spec.group_elem_counts()).sum())
+        return live_elems, live_tiles * self.block[0] * self.block[1]
+
+    def mac_utilization(self, group_mask) -> float:
+        """Live weight elements / MAC area of the *dispatched* tiles — how
+        much of the padded tile grid the kernel visits is real work."""
+        live_elems, area = self.mac_accounting(group_mask)
+        return live_elems / area if area else 0.0
+
     def plan(self, group_mask) -> BlockSparsePlan:
         return plan_from_tile_mask(self.tile_mask(group_mask), self.block)
 
     def pack_weight(self, w: jnp.ndarray) -> jnp.ndarray:
         """(kx, ky, cin, cout) -> (k_packed, n_packed)."""
+        raise NotImplementedError
+
+    def pack_bias(self, b: jnp.ndarray) -> jnp.ndarray:
+        """(cout,) -> (n_packed,), lanes aligned with ``pack_weight``."""
         raise NotImplementedError
 
     def pack_patches(self, patches: jnp.ndarray) -> jnp.ndarray:
@@ -99,6 +148,12 @@ class FpgaConvGemmLayout(ConvGemmLayout):
         w2 = jnp.pad(w2, ((0, 0), (0, 0), (0, 0), (0, bn - n_cu)))
         return w2.reshape(cin * bk, n_fb * bn)
 
+    def pack_bias(self, b: jnp.ndarray) -> jnp.ndarray:
+        kx, ky, cin, cout, n_cu, n_fb = self._dims()
+        _, bn = self.block
+        b2 = jnp.pad(b, (0, n_fb * n_cu - cout)).reshape(n_fb, n_cu)
+        return jnp.pad(b2, ((0, 0), (0, bn - n_cu))).reshape(n_fb * bn)
+
     def pack_patches(self, patches: jnp.ndarray) -> jnp.ndarray:
         kx, ky, cin, cout, n_cu, n_fb = self._dims()
         bk, _ = self.block
@@ -116,6 +171,81 @@ class FpgaConvGemmLayout(ConvGemmLayout):
 
 
 @dataclasses.dataclass(frozen=True)
+class PackedFpgaConvGemmLayout(ConvGemmLayout):
+    """Multi-group tiles: ``cpk = bk // ceil8(kx·ky)`` input channels per
+    K-tile (channel ``g`` -> tile ``g // cpk``, row slot ``g % cpk``) and
+    ``fpn = bn // n_cu`` f_blocks per N-tile (f_block ``f`` -> tile
+    ``f // fpn``, lane slot ``f % fpn``). A tile is live iff any covered
+    group is — pruned groups inside live tiles are zeros in the packed
+    masked weight, so the GEMM stays exact while the grid shrinks by up to
+    ``cpk·fpn`` over the one-group-per-tile layout."""
+
+    def _packing(self):
+        kx, ky, cin, cout = self.spec.shape
+        n_cu, n_fb = self.spec.n_cu, self.spec.n_fblocks
+        bk, bn = self.block
+        kxky = kx * ky
+        slot = _ceil_to(kxky, 8)
+        return kxky, cin, cout, n_cu, n_fb, slot, bk // slot, bn // n_cu
+
+    def _group_grid(self, group_mask) -> np.ndarray:
+        """(num_groups,) -> (nKb, cpk, nNb, fpn) bool, padded with False."""
+        kxky, cin, cout, n_cu, n_fb, slot, cpk, fpn = self._packing()
+        nKb, nNb = self.tiles
+        g = np.asarray(group_mask).reshape(cin, n_fb) > 0
+        g = np.pad(g, ((0, nKb * cpk - cin), (0, nNb * fpn - n_fb)))
+        return g.reshape(nKb, cpk, nNb, fpn)
+
+    def tile_mask(self, group_mask) -> np.ndarray:
+        return self._group_grid(group_mask).any(axis=(1, 3))
+
+    def tile_occupancy(self, group_mask) -> Tuple[np.ndarray, np.ndarray]:
+        live = self._group_grid(group_mask).sum(axis=(1, 3))
+        total = self._group_grid(np.ones(self.spec.num_groups)).sum(axis=(1, 3))
+        return live.astype(np.int64), total.astype(np.int64)
+
+    def pack_weight(self, w: jnp.ndarray) -> jnp.ndarray:
+        kxky, cin, cout, n_cu, n_fb, slot, cpk, fpn = self._packing()
+        nKb, nNb = self.tiles
+        bk, bn = self.block
+        w2 = jnp.transpose(w.reshape(kxky, cin, cout), (1, 0, 2))
+        w2 = jnp.pad(w2, ((0, nKb * cpk - cin), (0, slot - kxky),
+                          (0, n_fb * n_cu - cout)))
+        w2 = w2.reshape(nKb, cpk * slot, n_fb, n_cu)
+        w2 = jnp.pad(w2, ((0, 0), (0, bk - cpk * slot),
+                          (0, nNb * fpn - n_fb), (0, 0)))
+        w2 = w2.reshape(nKb, bk, nNb, fpn * n_cu)
+        w2 = jnp.pad(w2, ((0, 0), (0, 0), (0, 0), (0, bn - fpn * n_cu)))
+        return w2.reshape(nKb * bk, nNb * bn)
+
+    def pack_bias(self, b: jnp.ndarray) -> jnp.ndarray:
+        kxky, cin, cout, n_cu, n_fb, slot, cpk, fpn = self._packing()
+        nNb = self.tiles[1]
+        bn = self.block[1]
+        b2 = jnp.pad(b, (0, nNb * fpn * n_cu - cout)).reshape(nNb, fpn * n_cu)
+        return jnp.pad(b2, ((0, 0), (0, bn - fpn * n_cu))).reshape(nNb * bn)
+
+    def pack_patches(self, patches: jnp.ndarray) -> jnp.ndarray:
+        kxky, cin, cout, n_cu, n_fb, slot, cpk, fpn = self._packing()
+        nKb = self.tiles[0]
+        bk = self.block[0]
+        p = patches.reshape(-1, kxky, cin)
+        p = jnp.transpose(p, (0, 2, 1))                   # channel-major K
+        p = jnp.pad(p, ((0, 0), (0, nKb * cpk - cin), (0, slot - kxky)))
+        p = p.reshape(-1, nKb, cpk * slot)
+        p = jnp.pad(p, ((0, 0), (0, 0), (0, bk - cpk * slot)))
+        return p.reshape(-1, nKb * bk)
+
+    def unpack_output(self, out2d: jnp.ndarray, lead_shape) -> jnp.ndarray:
+        kxky, cin, cout, n_cu, n_fb, slot, cpk, fpn = self._packing()
+        nNb = self.tiles[1]
+        bn = self.block[1]
+        o = out2d.reshape(-1, nNb, bn)[:, :, :fpn * n_cu]
+        o = o.reshape(-1, nNb * fpn, n_cu)[:, :n_fb, :]
+        return o.reshape(-1, n_fb * n_cu)[:, :cout].reshape(*lead_shape, cout)
+
+
+@dataclasses.dataclass(frozen=True)
 class TileConvGemmLayout(ConvGemmLayout):
     def tile_mask(self, group_mask) -> np.ndarray:
         return np.asarray(group_mask).reshape(self.tiles) > 0
@@ -124,6 +254,10 @@ class TileConvGemmLayout(ConvGemmLayout):
         K, N = self.spec.shape
         w2 = w.reshape(K, N)
         return jnp.pad(w2, ((0, self.k_packed - K), (0, self.n_packed - N)))
+
+    def pack_bias(self, b: jnp.ndarray) -> jnp.ndarray:
+        _, N = self.spec.shape
+        return jnp.pad(b, (0, self.n_packed - N))
 
     def pack_patches(self, patches: jnp.ndarray) -> jnp.ndarray:
         K, _ = self.spec.shape
@@ -135,14 +269,29 @@ class TileConvGemmLayout(ConvGemmLayout):
         return out2d[:, :N].reshape(*lead_shape, N)
 
 
-def conv_gemm_layout(spec: GroupSpec, *, bn: int = 128) -> ConvGemmLayout:
-    """Layout for a conv's im2col GEMM, tile grid aligned with ``spec``."""
+def conv_gemm_layout(spec: GroupSpec, *, bn: int = 128, packed: bool = False,
+                     bk: int = 128) -> ConvGemmLayout:
+    """Layout for a conv's im2col GEMM, tile grid aligned with ``spec``.
+
+    ``packed=False`` (default): one (g, f_block) group per tile — exact
+    schedule-step accounting, heavy lane padding. ``packed=True``: MXU-
+    shaped ``(bk, bn)`` tiles covering many groups — far fewer grid steps
+    at the same pruning, accounting via :meth:`ConvGemmLayout.tile_occupancy`.
+    """
     if isinstance(spec, FpgaConvGroupSpec):
         kx, ky, cin, cout = spec.shape
         if spec.n_cu > bn:
             raise ValueError(f"n_cu={spec.n_cu} exceeds the {bn}-lane tile")
-        bk = max(8, _ceil_to(kx * ky, 8))
-        return FpgaConvGemmLayout(spec=spec, block=(bk, bn),
+        kxky = kx * ky
+        if packed:
+            slot = _ceil_to(kxky, 8)
+            bk_eff = max(bk, slot)          # giant kernels: one channel/tile
+            cpk, fpn = bk_eff // slot, bn // spec.n_cu
+            return PackedFpgaConvGemmLayout(
+                spec=spec, block=(bk_eff, bn),
+                tiles=(-(-cin // cpk), -(-spec.n_fblocks // fpn)))
+        bk_pg = max(8, _ceil_to(kxky, 8))
+        return FpgaConvGemmLayout(spec=spec, block=(bk_pg, bn),
                                   tiles=(cin, spec.n_fblocks))
     if isinstance(spec, TpuTileGroupSpec):
         if len(spec.shape) != 2:
@@ -153,29 +302,65 @@ def conv_gemm_layout(spec: GroupSpec, *, bn: int = 128) -> ConvGemmLayout:
     raise TypeError(f"no conv GEMM layout for {type(spec).__name__}")
 
 
-def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm: int = 128):
+def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm: int = 128,
+                     weight: Optional[jnp.ndarray] = None,
+                     bias: Optional[jnp.ndarray] = None,
+                     relu: bool = False):
     """Bind the Pallas block-sparse kernel to one conv layer's plan.
 
-    Returns ``conv(x, w, stride=1, padding="SAME") -> (B, Ho, Wo, cout)``
+    Returns ``conv(x, w=None, stride=1, padding="SAME") -> (B, Ho, Wo, cout)``
     computing ``conv(x, w ⊙ expand(group_mask))`` — pruned groups are dead
-    tiles the grid never dispatches. The plan is static: rebind after HAPM
-    prunes more groups (an epoch-boundary event). ``conv.plan`` /
-    ``conv.layout`` expose the dispatch accounting.
+    tiles the grid never dispatches (and, for the packed layout, zero slabs
+    inside live tiles). The plan is static: rebind after HAPM prunes more
+    groups (an epoch-boundary event).
+
+    ``weight``: bind-time prepacking. The masked weight is packed **once**
+    here and the closure only packs im2col patches per call — call
+    ``conv(x, stride=..., padding=...)`` with no weight. Without it the
+    closure masks + packs ``w`` on every call (test / legacy path).
+    ``bias`` / ``relu``: fused kernel epilogue (per-cout bias add and ReLU
+    at the accumulator flush — folded-BN inference entirely in-kernel).
+    The epilogue path is forward-only. ``conv.plan`` / ``conv.layout`` /
+    ``conv.group_mask`` expose the dispatch accounting.
     """
     from ..kernels import ops
     from ..kernels.conv_lowering import im2col_patches
 
-    tm = layout.tile_mask(group_mask)
+    gm = np.asarray(group_mask)
+    tm = layout.tile_mask(gm)
     plan = plan_from_tile_mask(tm, layout.block)
-    f = ops.make_block_sparse_matmul(plan, tm, bm=bm)
+    packed_bias = (None if bias is None
+                   else layout.pack_bias(jnp.asarray(bias, jnp.float32)))
+    f = ops.make_block_sparse_matmul(plan, tm, bm=bm, bias=packed_bias,
+                                     relu=relu)
+    gm_dev = jnp.asarray(gm, jnp.float32)
 
-    def conv(x, w, stride: int = 1, padding: str = "SAME"):
-        kx, ky = w.shape[:2]
+    def _masked(w):
+        spec = layout.spec
+        w2 = w.reshape(spec.shape) if w.shape != spec.shape else w
+        return apply_group_mask(spec, w2, gm_dev.astype(w.dtype)).reshape(w.shape)
+
+    if weight is not None:
+        w_packed = layout.pack_weight(_masked(weight))
+        bound_hw = weight.shape[:2]
+    else:
+        w_packed, bound_hw = None, None
+
+    def conv(x, w=None, stride: int = 1, padding: str = "SAME"):
+        if w is None:
+            if w_packed is None:
+                raise ValueError("no weight bound at build time — pass w or "
+                                 "rebuild with make_sparse_conv(..., weight=w)")
+            (kx, ky), wp = bound_hw, w_packed
+        else:
+            (kx, ky), wp = w.shape[:2], layout.pack_weight(_masked(w))
         patches = im2col_patches(x, kx, ky, stride, padding)
         B, Ho, Wo = patches.shape[:3]
-        out2d = f(layout.pack_patches(patches), layout.pack_weight(w))
+        out2d = f(layout.pack_patches(patches), wp)
         return layout.unpack_output(out2d, (B, Ho, Wo))
 
     conv.plan = plan
     conv.layout = layout
+    conv.group_mask = gm
+    conv.prebound = weight is not None
     return conv

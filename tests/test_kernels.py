@@ -59,6 +59,40 @@ def test_block_sparse_grads_match_ref():
     assert float(jnp.abs(gw[:128, 128:]).max()) == 0.0
 
 
+@pytest.mark.parametrize("relu,dtype", [
+    (False, jnp.float32),
+    (True, jnp.float32),
+    (True, jnp.bfloat16),
+])
+def test_block_sparse_fused_epilogue(relu, dtype):
+    """Bias add (+ ReLU) fused at the kernel's flush step == matmul then
+    epilogue in jnp; fully-pruned columns still flush the bias."""
+    rng = np.random.RandomState(11)
+    M, K, N = 200, 256, 384                  # M not tile-aligned
+    block = (128, 128)
+    tm = _random_tile_mask(rng, K // 128, N // 128, 0.5)
+    tm[:, -1] = False                        # a fully-pruned output column
+    w = jnp.asarray(rng.randn(K, N), dtype)
+    x = jnp.asarray(rng.randn(M, K), dtype)
+    b = jnp.asarray(rng.randn(N).astype(np.float32))
+    plan = plan_from_tile_mask(tm, block)
+    f = ops.make_block_sparse_matmul(plan, tm, bias=b, relu=relu)
+    out = f(x, w)
+    expect = ref.block_sparse_matmul_ref(x, w, jnp.asarray(tm), block)
+    expect = (expect.astype(jnp.float32) + b).astype(dtype)
+    if relu:
+        expect = jnp.maximum(expect, 0)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), rtol=tol, atol=tol)
+    # the dead column's output is exactly the (relu'd) bias broadcast
+    col = np.asarray(out[:, -128:], np.float32)
+    bias_col = np.asarray(b[-128:])
+    want = np.maximum(bias_col, 0) if relu else bias_col
+    np.testing.assert_allclose(col, np.broadcast_to(want.astype(col.dtype),
+                                                    col.shape), rtol=1e-2, atol=1e-2)
+
+
 def test_plan_density_and_transpose():
     rng = np.random.RandomState(3)
     w = rng.randn(256, 384).astype(np.float32)

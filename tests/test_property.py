@@ -182,6 +182,28 @@ def test_conv_plan_tiles_are_groups(kx, cin, cout, n_cu, seed):
     assert layout.k_packed % 8 == 0 and layout.n_packed % 128 == 0
 
 
+@given(kx=st.integers(1, 3), cin=st.integers(1, 40), cout=st.integers(1, 40),
+       n_cu=st.integers(1, 16), seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_packed_conv_plan_occupancy_exact(kx, cin, cout, n_cu, seed):
+    """Packed MXU-shaped layout: per-tile occupancy preserves the paper's
+    schedule-step accounting exactly (live groups == occupancy sum) while
+    never dispatching more tiles than the one-group-per-tile layout."""
+    spec = fpga_conv_groups((kx, kx, cin, cout), n_cu)
+    rng = np.random.RandomState(seed)
+    gm = (rng.rand(spec.num_groups) > 0.5).astype(np.float32)
+    packed = conv_gemm_layout(spec, packed=True)
+    pergroup = conv_gemm_layout(spec)
+    live, total = packed.tile_occupancy(gm)
+    assert int(live.sum()) == int(gm.sum())
+    assert int(total.sum()) == spec.num_groups
+    assert (packed.tile_mask(gm) == (live > 0)).all()
+    p_plan, g_plan = packed.plan(gm), pergroup.plan(gm)
+    assert int(p_plan.cnt.sum()) <= int(g_plan.cnt.sum())
+    assert np.prod(p_plan.tiles) <= np.prod(g_plan.tiles)
+    assert packed.k_packed % 8 == 0 and packed.n_packed % 128 == 0
+
+
 @given(seed=st.integers(0, 99))
 @settings(**SETTINGS)
 def test_apply_masks_idempotent(seed):
