@@ -2,10 +2,14 @@
 sparsity dispatch ratios in ``BENCH_sparse_cnn.json`` regress above the
 committed baseline (``benchmarks/sparse_cnn_baseline.json``).
 
-Ratios are deterministic given the bench config (M-row blocks scale
-linearly with batch, so they cancel), which makes this a hard gate rather
-than a noisy perf bound; wall-clock columns are intentionally NOT gated
-(CI machines vary). Refresh the baseline on purposeful layout changes:
+Most gated ratios are deterministic given the bench config (M-row blocks
+scale linearly with batch, so they cancel), which makes them hard gates
+rather than noisy perf bounds. The implicit-vs-materializing kernel
+wall-clock speedup is the one timing-based gate — it is a *ratio of two
+walls on the same machine* (so machine speed cancels) and gets
+``WALL_SLACK`` headroom instead of the exact tolerance; absolute
+wall-clock columns stay ungated (CI machines vary). Refresh the baseline
+on purposeful layout/kernel changes:
 
     PYTHONPATH=src python -m benchmarks.check_sparse_regression --update
 """
@@ -30,7 +34,15 @@ GATES = {
     "pergroup_grid_step_ratio": "max",        # PR-2 layout dispatch ratio
     "packed_vs_pergroup_step_cut": "min",     # packed must keep its step win
     "schedule_step_ratio": "max",             # paper-granularity live steps
+    "hbm_bytes_ratio": "max",                 # implicit must keep moving less
+    "adaptive_vs_fixed_b1_util": "min",       # batch-1 adaptive-bm recovery
+    "implicit_vs_materializing_wallclock_speedup": "min",   # timing-based
 }
+# timing-based gates may drop to this fraction of baseline before failing
+# (interpret-mode kernel ratios wobble ~10-20 % across runs/machines);
+# the bench itself asserts the hard >=1.3x floor when it regenerates
+WALL_KEYS = {"implicit_vs_materializing_wallclock_speedup"}
+WALL_SLACK = 0.7
 
 
 def _row_at(report: dict, target: float) -> dict:
@@ -71,9 +83,15 @@ def main(argv=None) -> int:
     failures = []
     for key, direction in GATES.items():
         cur, base = row[key], baseline["gates"][key]
-        bad = (cur > base + TOL) if direction == "max" else (cur < base - TOL)
+        if key in WALL_KEYS:
+            assert direction == "min", "wall gates are speedup floors"
+            bad = cur < base * WALL_SLACK - TOL
+            note = f"baseline {base:.6f}, {direction}, slack {WALL_SLACK}"
+        else:
+            bad = (cur > base + TOL) if direction == "max" else (cur < base - TOL)
+            note = f"baseline {base:.6f}, {direction}"
         mark = "REGRESSED" if bad else "ok"
-        print(f"  {key:>34}: {cur:.6f} (baseline {base:.6f}, {direction}) {mark}")
+        print(f"  {key:>44}: {cur:.6f} ({note}) {mark}")
         if bad:
             failures.append(key)
     if failures:

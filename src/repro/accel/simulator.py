@@ -54,6 +54,19 @@ class SimulationReport:
     schedule_steps_total: int = 0
     padded_mac_utilization: float = 0.0      # packed layout, dispatched tiles
     pergroup_mac_utilization: float = 0.0    # one-group-per-tile layout
+    # HBM data-movement contract per image on the packed layout:
+    # materializing (im2col patch matrix in HBM, fixed bm=128 — the PR-3
+    # execution) vs implicit (in-kernel window gather from the NHWC
+    # activation, adaptive bm). Per-layer numbers sit in
+    # grid_steps_per_layer ("hbm_materialized"/"hbm_implicit") next to
+    # the grid steps; bm_effective_per_layer is the adaptive M-block.
+    hbm_bytes_materialized: int = 0
+    hbm_bytes_implicit: int = 0
+    bm_effective_per_layer: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def hbm_bytes_ratio(self) -> float:
+        return self.hbm_bytes_implicit / max(self.hbm_bytes_materialized, 1)
 
     @property
     def grid_step_ratio(self) -> float:
@@ -88,6 +101,9 @@ class SimulationReport:
             "padded_mac_utilization": self.padded_mac_utilization,
             "pergroup_mac_utilization": self.pergroup_mac_utilization,
             "dsb_cycle_ratio": self.dsb_cycle_ratio,
+            "hbm_bytes_materialized": self.hbm_bytes_materialized,
+            "hbm_bytes_implicit": self.hbm_bytes_implicit,
+            "hbm_bytes_ratio": self.hbm_bytes_ratio,
         }
 
 
@@ -123,9 +139,14 @@ def simulate(
     dims = cnn.layer_dims(cfg, params)
 
     # --- group masks from the actual (quantized) weights -------------------
+    from ..sparse.conv_plan import conv_hbm_bytes, conv_m_blocks
+
+    feat_of = {p: (stride, feat) for p, stride, feat in cnn.conv_layer_order(cfg)}
     group_masks, layer_sparsity = [], {}
     grid_steps, tot_exec, tot_dense = {}, 0, 0
     pk_exec = pk_dense = sched_live = sched_total = 0
+    hbm_mat = hbm_imp = 0
+    bm_eff_per_layer = {}
     util_num = {"packed": 0.0, "pergroup": 0.0}
     util_den = {"packed": 0.0, "pergroup": 0.0}
     for path, layer in dims:
@@ -153,9 +174,20 @@ def simulate(
             live_elems, area = lo.mac_accounting(gm)
             util_num[kind] += mb * live_elems
             util_den[kind] += mb * area
+        stride, feat = feat_of[path]
+        h_mat = conv_hbm_bytes(layouts["packed"], gm, 1, feat, feat, stride,
+                               "SAME", implicit=False, bm=128)
+        h_imp = conv_hbm_bytes(layouts["packed"], gm, 1, feat, feat, stride,
+                               "SAME", implicit=True, bm="auto")
+        bm_eff_per_layer["/".join(path)] = conv_m_blocks(
+            layer.out_x, layer.out_y, 1, bm="auto", implicit=True)[1]
         grid_steps["/".join(path)] = {"executed": ex, "dense": dn,
                                       "packed_executed": ex_pk,
-                                      "packed_dense": dn_pk}
+                                      "packed_dense": dn_pk,
+                                      "hbm_materialized": h_mat,
+                                      "hbm_implicit": h_imp}
+        hbm_mat += h_mat
+        hbm_imp += h_imp
         tot_exec += ex
         tot_dense += dn
         pk_exec += ex_pk
@@ -201,6 +233,9 @@ def simulate(
                                 if util_den["packed"] else 0.0),
         pergroup_mac_utilization=(util_num["pergroup"] / util_den["pergroup"]
                                   if util_den["pergroup"] else 0.0),
+        hbm_bytes_materialized=hbm_mat,
+        hbm_bytes_implicit=hbm_imp,
+        bm_effective_per_layer=bm_eff_per_layer,
     )
 
 

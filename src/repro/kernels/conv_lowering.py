@@ -73,11 +73,17 @@ def conv_via_matmul(
     stride: int = 1,
     padding: str = "SAME",
     matmul: Optional[Callable] = None,
+    out_dtype: Optional[jnp.dtype] = None,
 ) -> jnp.ndarray:
     """Conv as im2col + GEMM. ``matmul(p2d, w2d)`` defaults to a dense f32-
     accumulating dot (the lowering oracle); pass a bound block-sparse kernel
     to execute pruning (see ``sparse.conv_plan.make_sparse_conv``, which also
-    repacks both operands onto its padded tile grid)."""
+    repacks both operands onto its padded tile grid).
+
+    ``out_dtype`` sets the default oracle's output dtype (default: ``x``'s
+    dtype). Pass ``jnp.float32`` to keep the f32 accumulation — bf16 callers
+    that fold BN scales into the weight otherwise lose the accumulated
+    precision to the final downcast."""
     kx, ky, cin, cout = w.shape
     p = im2col_patches(x, kx, ky, stride, padding)
     B, Ho, Wo = p.shape[:3]
@@ -85,5 +91,6 @@ def conv_via_matmul(
     w2d = w.reshape(kx * ky * cin, cout)
     if matmul is None:
         matmul = lambda a, b: jnp.dot(
-            a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+            a, b, preferred_element_type=jnp.float32).astype(
+                a.dtype if out_dtype is None else out_dtype)
     return matmul(p2d, w2d).reshape(B, Ho, Wo, cout)

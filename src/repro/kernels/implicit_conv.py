@@ -1,0 +1,192 @@
+"""Implicit-im2col block-sparse conv — the DSB kernel gathers its own patches.
+
+The materializing path (:mod:`repro.kernels.conv_lowering` +
+``sparse.conv_plan``) lowers a conv to ``patches @ W`` by writing a
+``(B·Ho·Wo, kx·ky·cin)`` patch matrix to HBM — a kx·ky× blowup of the
+activation — and then repacking it onto the padded tile grid, per call,
+per layer. The paper's accelerator (and HPIPE-style FPGA designs) never
+do that: kernel windows stream straight out of the input feature map
+while the DSB skips pruned groups. This kernel executes the same
+contract on the Pallas grid:
+
+- Grid is ``(B·bpi, nNb, max_nnz)`` — M-blocks × output tile columns ×
+  live K-tiles, exactly like :mod:`block_sparse_matmul`.
+- The x operand is the **padded NHWC activation itself**. Its BlockSpec
+  delivers a ``(1, Hp, Wp, cpk)`` slab — one image, the ``cpk`` input
+  channels covered by the live K-tile named by the scalar-prefetched
+  index table — and the kernel builds the ``(bm, bk)`` patch tile in
+  VMEM from kx·ky static strided slices of that slab (offsets ``(dy,
+  dx)`` are compile-time; the channel slice is the dynamic, prefetched
+  part). Pruned groups cost neither DMA nor MXU cycles: dead tiles are
+  never in the table, so their slabs are never fetched.
+- M-blocking is **adaptive**: an M-block is ``block_oh`` whole output
+  rows, ``bm = ceil8(block_oh·Wo) ≤ cap`` — a batch-1 4×4 tail runs at
+  ``bm=16`` instead of padding to 128. :func:`choose_m_block` picks the
+  largest such ``block_oh``; blocks never straddle images.
+- The fused bias+ReLU flush epilogue carries over unchanged.
+
+Per live grid step the kernel moves ``Hp·Wp·cpk`` activation elements
+instead of ``bm·bk`` patch-matrix elements — and the patch matrix is
+never written at all. VMEM working set adds one activation slab
+(``Hp·Wp·cpk``); :data:`SLAB_VMEM_BUDGET` bounds it, callers fall back
+to the materializing oracle above it (and for very wide images where no
+whole-row M-block fits the cap).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..dist.compat import tpu_compiler_params
+from .conv_lowering import same_pads
+
+# Largest activation slab (bytes) the implicit kernel will hold in VMEM.
+# One slab is (Hp, Wp, cpk) of the input dtype; above this the caller
+# uses the materializing path (still correct, just HBM-hungrier).
+SLAB_VMEM_BUDGET = 2 * 1024 * 1024
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def choose_m_block(ho: int, wo: int, cap: int = 128) -> Optional[Tuple[int, int, int]]:
+    """Adaptive M-blocking: whole output rows per grid block.
+
+    Returns ``(block_oh, bm, bpi)`` — ``block_oh`` output rows per
+    M-block, padded to ``bm = ceil8(block_oh·wo) ≤ cap`` kernel rows,
+    ``bpi`` M-blocks per image (blocks never straddle images). Picks the
+    largest ``block_oh`` that fits, so small layers stop padding up to a
+    fixed 128: a 4×4 output runs at ``bm=16``, an 8×8 at ``bm=64``.
+    ``None`` when even one output row exceeds ``cap`` (very wide images
+    → materializing fallback).
+    """
+    if ho < 1 or wo < 1 or _ceil_to(wo, 8) > cap:
+        return None
+    block_oh = max(b for b in range(1, ho + 1) if _ceil_to(b * wo, 8) <= cap)
+    return block_oh, _ceil_to(block_oh * wo, 8), -(-ho // block_oh)
+
+
+def pad_input(x: jnp.ndarray, kx: int, ky: int, stride: int, padding: str,
+              block_oh: int, bpi: int, c_packed: int) -> jnp.ndarray:
+    """Zero-pad an NHWC input for the implicit kernel: the conv's own
+    SAME/VALID pads, extra trailing rows so the *last* M-block's window
+    slab stays in bounds (its tail output rows are cropped after the
+    kernel), and channel padding to the packed K grid. Pure ``jnp.pad``
+    — no kx·ky patch blowup, no transpose."""
+    B, H, W, C = x.shape
+    if padding == "SAME":
+        (pt, pb), (pw0, pw1) = same_pads(H, kx, stride), same_pads(W, ky, stride)
+    else:
+        pt = pb = pw0 = pw1 = 0
+    rows_need = (bpi - 1) * block_oh * stride + (block_oh - 1) * stride + kx
+    extra = max(rows_need - (H + pt + pb), 0)
+    return jnp.pad(x, ((0, 0), (pt, pb + extra), (pw0, pw1),
+                       (0, c_packed - C)))
+
+
+def _kernel(idx_ref, cnt_ref, x_ref, w_ref, *refs,
+            kx, ky, stride, block_oh, bpi, wo, cpk, slot, bm, bk,
+            has_bias, relu):
+    b_ref = refs[0] if has_bias else None
+    o_ref, acc_ref = refs[-2], refs[-1]
+    i, j, s = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(s < cnt_ref[j])
+    def _gather_mac():
+        xs = x_ref[0]                       # (Hp, Wp, cpk) activation slab
+        rows = (block_oh - 1) * stride + kx
+        r0 = (i % bpi) * (block_oh * stride)
+        win = jax.lax.dynamic_slice(xs, (r0, 0, 0),
+                                    (rows, xs.shape[1], cpk))
+        # the im2col gather, in VMEM: tap (dy, dx) of output pixel
+        # (oh, ow) is win[oh*stride + dy, ow*stride + dx] — kx*ky static
+        # strided slices instead of an HBM patch matrix
+        taps = [win[dy:dy + (block_oh - 1) * stride + 1:stride,
+                    dx:dx + (wo - 1) * stride + 1:stride, :]
+                for dy in range(kx) for dx in range(ky)]
+        p = jnp.stack(taps, axis=-1)        # (block_oh, wo, cpk, kx*ky)
+        if slot > kx * ky:                  # sublane-aligned row slots
+            p = jnp.pad(p, ((0, 0), (0, 0), (0, 0), (0, slot - kx * ky)))
+        p = p.reshape(block_oh * wo, cpk * slot)
+        if bm > block_oh * wo or bk > cpk * slot:
+            p = jnp.pad(p, ((0, bm - block_oh * wo), (0, bk - cpk * slot)))
+        acc_ref[...] += jnp.dot(p, w_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _flush():
+        out = acc_ref[...]
+        if has_bias:
+            out = out + b_ref[...].astype(jnp.float32)
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kx", "ky", "stride", "block_oh", "bpi", "wo", "block", "bm", "cpk",
+    "slot", "relu", "interpret"))
+def implicit_block_sparse_conv(
+    xp: jnp.ndarray,           # (B, Hp, Wp, nKb*cpk) pad_input() output
+    w: jnp.ndarray,            # (nKb*bk, nNb*bn) packed weight
+    idx: jnp.ndarray,          # (nNb, max_nnz) int32 live K-tile (= cin-block) ids
+    cnt: jnp.ndarray,          # (nNb,) int32
+    bias: Optional[jnp.ndarray] = None,    # (nNb*bn,) fused epilogue bias
+    *,
+    kx: int, ky: int, stride: int,
+    block_oh: int, bpi: int, wo: int,
+    block: Tuple[int, int], bm: int, cpk: int, slot: int,
+    relu: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """-> (B*bpi*bm, nNb*bn). Rows of M-block ``(b, p)`` start at
+    ``(b*bpi + p)*bm``; the first ``block_oh*wo`` are output pixels
+    ``(p*block_oh .. )*wo`` of image ``b`` row-major, the rest padding
+    (crop with the output-row mapping, see ``conv_plan.make_sparse_conv``)."""
+    B, Hp, Wp, Cp = xp.shape
+    bk, bn = block
+    assert Cp % cpk == 0 and w.shape[0] % bk == 0 and w.shape[1] % bn == 0, (
+        f"packed shapes off-grid: x {xp.shape} (cpk={cpk}), w {w.shape}, "
+        f"block={block}")
+    nNb = w.shape[1] // bn
+    max_nnz = idx.shape[1]
+    has_bias = bias is not None
+
+    in_specs = [
+        pl.BlockSpec((1, Hp, Wp, cpk),
+                     lambda i, j, s, idx, cnt: (i // bpi, 0, 0, idx[j, s])),
+        pl.BlockSpec((bk, bn), lambda i, j, s, idx, cnt: (idx[j, s], j)),
+    ]
+    inputs = [idx, cnt, xp, w]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s, idx, cnt: (0, j)))
+        inputs.append(bias.reshape(1, -1))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * bpi, nNb, max_nnz),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s, idx, cnt: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, kx=kx, ky=ky, stride=stride,
+                          block_oh=block_oh, bpi=bpi, wo=wo, cpk=cpk,
+                          slot=slot, bm=bm, bk=bk, has_bias=has_bias,
+                          relu=relu),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * bpi * bm, w.shape[1]), xp.dtype),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(*inputs)

@@ -242,19 +242,51 @@ class SparseConvExec:
     quantized: bool = False          # weights Q2.5-quantized before packing
     folded: bool = False             # bias/ReLU epilogue fused (apply_folded only)
     bound_weights: Any = None        # {path: source weight} — staleness check
+    implicit: bool = False           # convs bound to the implicit-im2col kernel
+    bm: Any = 128                    # M-blocking policy: int (fixed) or "auto"
 
-    def step_counts(self, cfg: ResNetConfig, batch: int = 1, bm: int = 128):
+    def _m_blocks(self, out: int, batch: int, bm=None):
+        from ..sparse.conv_plan import conv_m_blocks
+        return conv_m_blocks(out, out, batch,
+                             bm=self.bm if bm is None else bm,
+                             implicit=self.implicit)
+
+    def step_counts(self, cfg: ResNetConfig, batch: int = 1, bm=None):
         """(executed, dense) dispatched grid steps over the whole network —
-        what the Pallas grid actually visits on *this* exec's tile layout.
-        Executed steps per layer = M-row-blocks × live tiles."""
+        what the Pallas grid actually visits on *this* exec's tile layout
+        and M-blocking policy (``bm=None`` → the exec's own; pass an int
+        for the fixed PR-3 blocking). Executed steps per layer =
+        M-row-blocks × live tiles."""
         executed = dense = 0
         for path, stride, feat in conv_layer_order(cfg):
             plan = self.plans[path]
             out = -(-feat // stride)
-            mb = -(-batch * out * out // bm)
+            mb, _ = self._m_blocks(out, batch, bm)
             executed += mb * int(plan.cnt.sum())
             dense += mb * plan.tiles[0] * plan.tiles[1]
         return executed, dense
+
+    def bm_effective(self, cfg: ResNetConfig, batch: int = 1, bm=None):
+        """{layer-path: effective bm} under this exec's M-blocking policy."""
+        return {"/".join(path): self._m_blocks(-(-feat // stride), batch, bm)[1]
+                for path, stride, feat in conv_layer_order(cfg)}
+
+    def hbm_bytes(self, cfg: ResNetConfig, batch: int = 1,
+                  implicit: Any = None, bm=None, dtype_bytes: int = 4) -> int:
+        """Analytic HBM bytes one forward moves through the conv layers
+        (``sparse.conv_plan.conv_hbm_bytes`` summed over the network) —
+        patch-matrix traffic for the materializing path, activation-slab
+        streaming for the implicit one. ``implicit=None`` → the exec's
+        own path."""
+        from ..sparse.conv_plan import conv_hbm_bytes
+        use_implicit = self.implicit if implicit is None else implicit
+        total = 0
+        for path, stride, feat in conv_layer_order(cfg):
+            total += conv_hbm_bytes(
+                self.layouts[path], self.group_masks_np[path], batch, feat,
+                feat, stride, "SAME", implicit=use_implicit,
+                bm=self.bm if bm is None else bm, dtype_bytes=dtype_bytes)
+        return total
 
     def schedule_step_counts(self):
         """(live, total) paper-granularity (g, f_block) schedule steps over
@@ -269,17 +301,21 @@ class SparseConvExec:
         return live, total
 
     def mac_utilization(self, cfg: ResNetConfig, batch: int = 1,
-                        bm: int = 128) -> float:
-        """Network padded-MAC utilization: live weight elements per
-        dispatched tile area, M-block-weighted like ``step_counts``."""
+                        bm=None) -> float:
+        """Network padded-MAC utilization: useful MACs (real output rows ×
+        live weight elements) per dispatched MAC area (padded M-blocks ×
+        dispatched tile area). M-padding-aware: a batch-1 4×4 tail padded
+        to a fixed ``bm=128`` shows up as an 8× utilization hit here,
+        which the adaptive (``bm="auto"``) policy removes. At exact
+        M-multiples this reduces to the PR-3 (M-cancelling) metric."""
         num = den = 0.0
         for path, stride, feat in conv_layer_order(cfg):
             out = -(-feat // stride)
-            mb = -(-batch * out * out // bm)
+            mb, bm_eff = self._m_blocks(out, batch, bm)
             live_elems, area = self.layouts[path].mac_accounting(
                 self.group_masks_np[path])
-            num += mb * live_elems
-            den += mb * area
+            num += batch * out * out * live_elems
+            den += mb * bm_eff * area
         return num / den if den else 0.0
 
 
@@ -320,6 +356,17 @@ def _bind_conv_layers(tree: PyTree, specs: PyTree, group_masks: PyTree,
     return table, plans, layouts, gms, bound
 
 
+def _resolve_exec_implicit(implicit: Optional[bool], layouts) -> bool:
+    """The exec-level execution contract: what the builder *requested*
+    (resolved against layout capability), not which layers happened to
+    bind — an all-dense-fallback exec must still price/report the
+    contract its kernels would run, or the density-1.0 bench row labels
+    materializing bytes as implicit ones."""
+    capable = any(lo.implicit_geometry() is not None
+                  for lo in layouts.values())
+    return capable if implicit is None else bool(implicit) and capable
+
+
 def build_sparse_execution(
     params: PyTree,
     *,
@@ -327,9 +374,10 @@ def build_sparse_execution(
     specs: PyTree = None,
     group_masks: PyTree = None,
     dense_fallback: float = 0.999,
-    bm: int = 128,
+    bm: Any = "auto",
     packed: bool = False,
     quantized: bool = False,
+    implicit: Optional[bool] = None,
 ) -> SparseConvExec:
     """Bind every conv layer to the Pallas block-sparse kernel, prepacking
     the masked (optionally Q2.5-quantized) weight once at bind time.
@@ -345,6 +393,12 @@ def build_sparse_execution(
     (g, f_block) group — far fewer grid steps at the same pruning.
     ``quantized``: prepack ``Q.quantize(w, Q2_5)`` so the exec matches a
     ``cfg.quantized`` dense forward.
+    ``implicit``: bind the implicit-im2col kernel (``None`` = auto — on
+    whenever the layout's K axis is channel-major, i.e. both FPGA
+    layouts) so the im2col patch matrix is never materialized in HBM;
+    ``False`` forces the materializing path (the parity oracle).
+    ``bm``: M-blocking policy, ``"auto"`` (adaptive per layer/batch) or a
+    fixed int (the PR-3 contract).
 
     Host-side: requires concrete weights (plans are numpy; raises under
     jit — prebuild and pass the exec in); the bound kernels are jitted.
@@ -355,15 +409,18 @@ def build_sparse_execution(
 
     def bind_one(keys, w, layout, gm, plan):
         return (None if plan.density >= dense_fallback
-                else make_sparse_conv(layout, gm, bm=bm, weight=w))
+                else make_sparse_conv(layout, gm, bm=bm, weight=w,
+                                      implicit=implicit))
 
     table, plans, layouts, gms, bound = _bind_conv_layers(
         params, specs, group_masks, n_cu, packed,
         (lambda l: Q.quantize(l, Q.Q2_5)) if quantized else (lambda l: l),
         bind_one)
+    exec_implicit = _resolve_exec_implicit(implicit, layouts)
     return SparseConvExec(table=table, plans=plans, n_cu=n_cu,
                           layouts=layouts, group_masks_np=gms,
-                          quantized=quantized, bound_weights=bound)
+                          quantized=quantized, bound_weights=bound,
+                          implicit=exec_implicit, bm=bm)
 
 
 def build_sparse_inference(
@@ -374,8 +431,9 @@ def build_sparse_inference(
     specs: PyTree = None,
     group_masks: PyTree = None,
     dense_fallback: float = 0.999,
-    bm: int = 128,
+    bm: Any = "auto",
     packed: bool = True,
+    implicit: Optional[bool] = True,
 ) -> SparseConvExec:
     """Bind BN-folded conv layers (``fold_batchnorm`` output: per-conv
     ``{"w", "b"}``) to the kernel with the *fused epilogue*: bias add and —
@@ -383,7 +441,11 @@ def build_sparse_inference(
     block's conv1) — ReLU happen at the kernel's flush step, so folded-BN
     inference runs entirely inside the kernel. conv2/proj outputs feed the
     residual add first, so only their bias is fused. Defaults to the
-    packed (MXU-shaped) layout; consume with :func:`apply_folded`.
+    packed (MXU-shaped) layout with the **implicit-im2col** kernel
+    (``implicit=True``: windows gathered from the NHWC activation
+    in-kernel, no patch matrix in HBM, adaptive ``bm="auto"`` M-blocking;
+    ``implicit=False`` keeps the materializing oracle). Consume with
+    :func:`apply_folded`.
     """
     from ..sparse.conv_plan import make_sparse_conv
 
@@ -395,13 +457,14 @@ def build_sparse_inference(
         bias = _get_path(folded, keys[:-1])["b"]
         relu = keys[-2] in ("conv0", "conv1")   # ReLU directly after BN
         return make_sparse_conv(layout, gm, bm=bm, weight=w, bias=bias,
-                                relu=relu)
+                                relu=relu, implicit=implicit)
 
     table, plans, layouts, gms, bound = _bind_conv_layers(
         conv_params, specs, group_masks, n_cu, packed, lambda l: l, bind_one)
+    exec_implicit = _resolve_exec_implicit(implicit, layouts)
     return SparseConvExec(table=table, plans=plans, n_cu=n_cu,
                           layouts=layouts, group_masks_np=gms, folded=True,
-                          bound_weights=bound)
+                          bound_weights=bound, implicit=exec_implicit, bm=bm)
 
 
 # sparse=True builds are memoized on params identity: the cache holds a

@@ -82,6 +82,48 @@ class ConvGemmLayout:
         """(num_groups,) {0,1} -> (nKb, nNb) bool, host-side."""
         raise NotImplementedError
 
+    def implicit_geometry(self) -> Optional[dict]:
+        """Window geometry of the K axis for the implicit-im2col kernel, or
+        ``None`` when this layout's K packing isn't channel-major (the
+        in-kernel gather contract: K-tile ``t`` covers input channels
+        ``[t*cpk, (t+1)*cpk)``, channel slot ``c`` owns rows ``[c*slot,
+        c*slot + kx*ky)`` = the (dy, dx) taps in row-major tap order).
+        Keys: ``kx, ky, cpk, slot``."""
+        return None
+
+    def implicit_index_table(self, group_mask):
+        """Offset-augmented dispatch table for the implicit kernel.
+
+        Returns ``(entries, cnt, taps)``: ``entries[j, s] = (k_tile,
+        cin_start, cin_count)`` for live step ``s`` of output tile column
+        ``j`` (the kernel's BlockSpec consumes column 0; the cin slice is
+        what that K-tile id *means* against the NHWC activation), and
+        ``taps[t] = (row_slot, dy, dx)`` maps in-tile row ``c*slot +
+        row_slot`` to input pixel ``(ho*stride + dy, wo*stride + dx)`` of
+        channel ``cin_start + c`` — the gather contract, and the bridge
+        back to the materialized im2col rows (property-tested in
+        ``tests/test_implicit_conv.py``)."""
+        geo = self.implicit_geometry()
+        if geo is None:
+            raise ValueError(
+                f"{type(self).__name__} packs K in a non-channel-major "
+                "order — no implicit-im2col table (use the materializing "
+                "path)")
+        plan = self.plan(group_mask)
+        cin = self.spec.shape[2]
+        cpk = geo["cpk"]
+        nNb, max_nnz = plan.idx.shape
+        entries = np.zeros((nNb, max_nnz, 3), np.int32)
+        for j in range(nNb):
+            for s in range(int(plan.cnt[j])):
+                t = int(plan.idx[j, s])
+                c0 = t * cpk
+                entries[j, s] = (t, c0, max(0, min(cpk, cin - c0)))
+        taps = np.asarray([[dy * geo["ky"] + dx, dy, dx]
+                           for dy in range(geo["kx"])
+                           for dx in range(geo["ky"])], np.int32)
+        return entries, plan.cnt.copy(), taps
+
     def tile_occupancy(self, group_mask) -> Tuple[np.ndarray, np.ndarray]:
         """(live, total) schedule groups covered per tile, (nKb, nNb) ints.
 
@@ -133,6 +175,11 @@ class FpgaConvGemmLayout(ConvGemmLayout):
     def _dims(self):
         kx, ky, cin, cout = self.spec.shape
         return kx, ky, cin, cout, self.spec.n_cu, self.spec.n_fblocks
+
+    def implicit_geometry(self) -> Optional[dict]:
+        kx, ky = self.spec.shape[:2]
+        # one channel per K-tile: the whole bk is that channel's slot
+        return {"kx": kx, "ky": ky, "cpk": 1, "slot": self.block[0]}
 
     def tile_mask(self, group_mask) -> np.ndarray:
         kx, ky, cin, cout, n_cu, n_fb = self._dims()
@@ -187,6 +234,11 @@ class PackedFpgaConvGemmLayout(ConvGemmLayout):
         kxky = kx * ky
         slot = _ceil_to(kxky, 8)
         return kxky, cin, cout, n_cu, n_fb, slot, bk // slot, bn // n_cu
+
+    def implicit_geometry(self) -> Optional[dict]:
+        kxky, cin, cout, n_cu, n_fb, slot, cpk, fpn = self._packing()
+        kx, ky = self.spec.shape[:2]
+        return {"kx": kx, "ky": ky, "cpk": cpk, "slot": slot}
 
     def _group_grid(self, group_mask) -> np.ndarray:
         """(num_groups,) -> (nKb, cpk, nNb, fpn) bool, padded with False."""
@@ -302,11 +354,84 @@ def conv_gemm_layout(spec: GroupSpec, *, bn: int = 128, packed: bool = False,
     raise TypeError(f"no conv GEMM layout for {type(spec).__name__}")
 
 
-def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm: int = 128,
+def adaptive_bm(m_rows: int, cap: int = 128) -> int:
+    """Materializing-path adaptive M-block: the whole (padded-to-8) row
+    count when it fits under ``cap``, else ``cap`` — batch-1 tails stop
+    padding a 16-row output up to a fixed 128."""
+    return min(cap, _ceil_to(max(int(m_rows), 1), 8))
+
+
+def conv_m_blocks(ho: int, wo: int, batch: int, *, bm="auto",
+                  implicit: bool = False) -> Tuple[int, int]:
+    """(number of M-blocks, effective bm) for one conv layer's grid —
+    the single source for step/MAC accounting (``SparseConvExec``,
+    ``accel.simulator``, benches). ``bm`` is an int (fixed, the PR-3
+    contract) or ``"auto"`` (adaptive). The implicit kernel blocks on
+    whole output rows per image; the materializing path on flat
+    ``B·Ho·Wo`` rows."""
+    from ..kernels.implicit_conv import choose_m_block
+
+    cap = 128 if bm == "auto" else int(bm)
+    if implicit:
+        mb = choose_m_block(ho, wo, cap=cap)
+        if mb is not None:
+            block_oh, bm_eff, bpi = mb
+            return batch * bpi, bm_eff
+    bm_eff = adaptive_bm(batch * ho * wo, cap) if bm == "auto" else cap
+    return -(-batch * ho * wo // bm_eff), bm_eff
+
+
+def conv_hbm_bytes(layout: ConvGemmLayout, group_mask, batch: int, h: int,
+                   w: int, stride: int = 1, padding: str = "SAME", *,
+                   implicit: bool, bm="auto", dtype_bytes: int = 4) -> int:
+    """Analytic HBM bytes one forward of this conv layer moves — the
+    data-movement contract the implicit kernel changes.
+
+    Materializing: read the activation once (im2col), write the packed
+    ``(M̂, k_packed)`` patch matrix, then stream one ``(bm, bk)`` patch
+    tile + one ``(bk, bn)`` weight tile per live grid step and write the
+    ``(M̂, n_packed)`` output. (A lower bound — XLA's im2col/pack
+    intermediates add more unless fully fused.)
+
+    Implicit: stream one ``(Hp, Wp, cpk)`` activation slab + one weight
+    tile per live grid step and write the output — the patch matrix
+    never exists.
+    """
+    from ..kernels.conv_lowering import conv_out_size
+    from ..kernels.implicit_conv import choose_m_block, same_pads
+
+    geo = layout.implicit_geometry()
+    kx, ky, cin, cout = layout.spec.shape
+    ho, wo = conv_out_size(h, kx, stride, padding), conv_out_size(w, ky, stride, padding)
+    plan = layout.plan(group_mask)
+    live = int(plan.cnt.sum())
+    bk, bn = layout.block
+    mb, bm_eff = conv_m_blocks(ho, wo, batch, bm=bm,
+                               implicit=implicit and geo is not None)
+    steps = mb * live
+    w_bytes = steps * bk * bn * dtype_bytes
+    out_bytes = mb * bm_eff * layout.n_packed * dtype_bytes
+    if implicit and geo is not None and choose_m_block(
+            ho, wo, cap=128 if bm == "auto" else int(bm)) is not None:
+        if padding == "SAME":
+            (pt, pb), (pw0, pw1) = same_pads(h, kx, stride), same_pads(w, ky, stride)
+        else:
+            pt = pb = pw0 = pw1 = 0
+        hp, wp = h + pt + pb, w + pw0 + pw1
+        slab = hp * wp * geo["cpk"] * dtype_bytes
+        return steps * slab + w_bytes + out_bytes
+    x_bytes = batch * h * w * cin * dtype_bytes
+    patches = mb * bm_eff * layout.k_packed * dtype_bytes      # write once
+    patch_reads = steps * bm_eff * bk * dtype_bytes            # kernel DMA
+    return x_bytes + patches + patch_reads + w_bytes + out_bytes
+
+
+def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
                      weight: Optional[jnp.ndarray] = None,
                      bias: Optional[jnp.ndarray] = None,
-                     relu: bool = False):
-    """Bind the Pallas block-sparse kernel to one conv layer's plan.
+                     relu: bool = False,
+                     implicit: Optional[bool] = None):
+    """Bind a Pallas block-sparse kernel to one conv layer's plan.
 
     Returns ``conv(x, w=None, stride=1, padding="SAME") -> (B, Ho, Wo, cout)``
     computing ``conv(x, w ⊙ expand(group_mask))`` — pruned groups are dead
@@ -314,25 +439,59 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm: int = 128,
     inside live tiles). The plan is static: rebind after HAPM prunes more
     groups (an epoch-boundary event).
 
+    ``implicit`` selects the kernel (default ``None`` = auto):
+      - ``True`` / auto on the channel-major FPGA layouts: the
+        **implicit-im2col** kernel (:mod:`repro.kernels.implicit_conv`)
+        gathers kernel windows from the padded NHWC activation inside the
+        grid — the ``(B·Ho·Wo, kx·ky·cin)`` patch matrix is never
+        materialized in HBM. Falls back to the materializing path per
+        call when no whole-row M-block fits (very wide images) or the
+        activation slab would blow :data:`implicit_conv.SLAB_VMEM_BUDGET`.
+        Forward-only (the materializing non-epilogue path keeps its VJP).
+      - ``False``: the materializing im2col + ``block_sparse_matmul``
+        path — the parity oracle, and the only path for
+        :class:`TileConvGemmLayout` (its K axis is tap-major).
+
+    ``bm``: M-blocking. ``"auto"`` (default) adapts to the layer —
+    whole-output-row blocks for the implicit kernel, ``ceil8(B·Ho·Wo)``
+    capped at 128 for the materializing path — so batch-1 tails stop
+    padding 10×; an int pins it (the PR-3 contract).
+
     ``weight``: bind-time prepacking. The masked weight is packed **once**
-    here and the closure only packs im2col patches per call — call
-    ``conv(x, stride=..., padding=...)`` with no weight. Without it the
-    closure masks + packs ``w`` on every call (test / legacy path).
+    here and the closure only pads the activation (implicit) or packs
+    im2col patches (materializing) per call. Without it the closure masks
+    + packs ``w`` on every call (test / legacy path).
     ``bias`` / ``relu``: fused kernel epilogue (per-cout bias add and ReLU
     at the accumulator flush — folded-BN inference entirely in-kernel).
     The epilogue path is forward-only. ``conv.plan`` / ``conv.layout`` /
-    ``conv.group_mask`` expose the dispatch accounting.
+    ``conv.group_mask`` / ``conv.implicit`` expose the dispatch accounting.
     """
     from ..kernels import ops
-    from ..kernels.conv_lowering import im2col_patches
+    from ..kernels import implicit_conv as IC
+    from ..kernels.conv_lowering import conv_out_size, im2col_patches
 
     gm = np.asarray(group_mask)
     tm = layout.tile_mask(gm)
     plan = plan_from_tile_mask(tm, layout.block)
+    geo = layout.implicit_geometry()
+    if implicit and geo is None:
+        raise ValueError(
+            f"implicit=True needs a channel-major K layout; "
+            f"{type(layout).__name__} has none — use implicit=False")
+    use_implicit = (geo is not None) if implicit is None else bool(implicit)
+    adaptive = bm == "auto"
+    bm_cap = 128 if adaptive else int(bm)
     packed_bias = (None if bias is None
                    else layout.pack_bias(jnp.asarray(bias, jnp.float32)))
-    f = ops.make_block_sparse_matmul(plan, tm, bm=bm, bias=packed_bias,
-                                     relu=relu)
+    idx_dev, cnt_dev = jnp.asarray(plan.idx), jnp.asarray(plan.cnt)
+    mms: dict = {}        # materializing kernels, keyed by effective bm
+
+    def _materializing(bm_eff):
+        if bm_eff not in mms:
+            mms[bm_eff] = ops.make_block_sparse_matmul(
+                plan, tm, bm=bm_eff, bias=packed_bias, relu=relu)
+        return mms[bm_eff]
+
     gm_dev = jnp.asarray(gm, jnp.float32)
 
     def _masked(w):
@@ -354,13 +513,38 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm: int = 128,
             (kx, ky), wp = bound_hw, w_packed
         else:
             (kx, ky), wp = w.shape[:2], layout.pack_weight(_masked(w))
+        B, H, W, C = x.shape
+        ho = conv_out_size(H, kx, stride, padding)
+        wo = conv_out_size(W, ky, stride, padding)
+        if use_implicit:
+            mb = IC.choose_m_block(ho, wo, cap=bm_cap)
+            if mb is not None:
+                block_oh, bm_eff, bpi = mb
+                cpk, slot = geo["cpk"], geo["slot"]
+                nKb = layout.tiles[0]
+                xp = IC.pad_input(x, kx, ky, stride, padding, block_oh, bpi,
+                                  nKb * cpk)
+                slab = xp.shape[1] * xp.shape[2] * cpk * x.dtype.itemsize
+                if slab <= IC.SLAB_VMEM_BUDGET:
+                    out2d = IC.implicit_block_sparse_conv(
+                        xp, wp, idx_dev, cnt_dev, packed_bias,
+                        kx=kx, ky=ky, stride=stride, block_oh=block_oh,
+                        bpi=bpi, wo=wo, block=layout.block, bm=bm_eff,
+                        cpk=cpk, slot=slot, relu=relu,
+                        interpret=ops._interpret())
+                    o = out2d.reshape(B, bpi, bm_eff, -1)[:, :, :block_oh * wo]
+                    o = o.reshape(B, bpi * block_oh, wo, -1)[:, :ho]
+                    return layout.unpack_output(
+                        o.reshape(B * ho * wo, -1), (B, ho, wo))
         patches = im2col_patches(x, kx, ky, stride, padding)
-        B, Ho, Wo = patches.shape[:3]
-        out2d = f(layout.pack_patches(patches), wp)
-        return layout.unpack_output(out2d, (B, Ho, Wo))
+        bm_eff = adaptive_bm(B * ho * wo, bm_cap) if adaptive else bm_cap
+        out2d = _materializing(bm_eff)(layout.pack_patches(patches), wp)
+        return layout.unpack_output(out2d, (B, ho, wo))
 
     conv.plan = plan
     conv.layout = layout
     conv.group_mask = gm
     conv.prebound = weight is not None
+    conv.implicit = use_implicit
+    conv.bm = bm
     return conv

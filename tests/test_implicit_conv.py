@@ -1,0 +1,276 @@
+"""Implicit-im2col kernel vs the ``conv_via_matmul`` oracle.
+
+The full contract sweep: stride {1,2} × SAME/VALID × f32/bf16 × density
+{0, 0.3, 1} × batch {1, 2} on the packed layout, plus the offset-table ↔
+im2col-row-mapping round-trip property for ragged shapes, the adaptive
+M-blocking invariants, the materializing fallbacks (wide images, VMEM
+budget), and the ``out_dtype`` accumulation fix.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fpga_conv_groups, tpu_tile_groups
+from repro.kernels import conv_lowering as CL
+from repro.kernels import implicit_conv as IC
+from repro.models import cnn
+from repro.sparse.conv_plan import (adaptive_bm, conv_gemm_layout,
+                                    conv_hbm_bytes, conv_m_blocks,
+                                    make_sparse_conv)
+
+
+def _group_mask(rng, n, density):
+    if density <= 0.0:
+        return np.zeros(n, np.float32)
+    if density >= 1.0:
+        return np.ones(n, np.float32)
+    return (rng.rand(n) < density).astype(np.float32)
+
+
+# stride {1,2} x SAME/VALID x f32/bf16 x density {0, 0.3, 1} x batch {1,2}
+SWEEP = list(itertools.product(
+    (1, 2), ("SAME", "VALID"), (jnp.float32, jnp.bfloat16),
+    (0.0, 0.3, 1.0), (1, 2)))
+
+
+@pytest.mark.parametrize("stride,padding,dtype,density,batch", SWEEP)
+def test_implicit_conv_parity_sweep(stride, padding, dtype, density, batch):
+    """Implicit kernel == conv_via_matmul oracle (f32 accumulation kept via
+    out_dtype) over the full contract sweep, packed layout, weight
+    prepacked at bind time."""
+    kx, cin, cout, n_cu = 3, 9, 10, 4      # ragged: K-tile and f_block tails
+    rng = np.random.RandomState(hash((stride, padding, density, batch)) % 2**31)
+    spec = fpga_conv_groups((kx, kx, cin, cout), n_cu)
+    gm = _group_mask(rng, spec.num_groups, density)
+    w = jnp.asarray(rng.randn(kx, kx, cin, cout), dtype)
+    wm = w * spec.expand(jnp.asarray(gm)).astype(dtype)
+    x = jnp.asarray(rng.randn(batch, 7, 6, cin), dtype)
+
+    conv = make_sparse_conv(conv_gemm_layout(spec, packed=True), gm,
+                            weight=w, implicit=True)
+    assert conv.implicit and conv.prebound
+    out = conv(x, stride=stride, padding=padding)
+    expect = CL.conv_via_matmul(x, wm, stride, padding,
+                                out_dtype=jnp.float32)
+    assert out.shape == expect.shape and out.dtype == dtype
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect), rtol=tol, atol=tol)
+    if density == 0.0:
+        assert float(jnp.abs(out.astype(jnp.float32)).max()) == 0.0
+
+
+def test_implicit_equals_materializing_exactly():
+    """Same layout, same plan, same packed weight: the implicit gather and
+    the materialized patch matrix feed the MXU identical tiles, so the two
+    kernels agree bitwise (not just within tolerance)."""
+    rng = np.random.RandomState(0)
+    spec = fpga_conv_groups((3, 3, 16, 32), 12)
+    gm = _group_mask(rng, spec.num_groups, 0.4)
+    w = jnp.asarray(rng.randn(3, 3, 16, 32).astype(np.float32))
+    x = jnp.asarray(rng.randn(2, 9, 8, 16).astype(np.float32))
+    layout = conv_gemm_layout(spec, packed=True)
+    for stride, padding in [(1, "SAME"), (2, "SAME"), (1, "VALID")]:
+        outs = {}
+        for implicit in (True, False):
+            conv = make_sparse_conv(layout, gm, weight=w, implicit=implicit,
+                                    bm=128)
+            assert conv.implicit == implicit
+            outs[implicit] = conv(x, stride=stride, padding=padding)
+        np.testing.assert_array_equal(np.asarray(outs[True]),
+                                      np.asarray(outs[False]))
+
+
+# ragged shapes: cin not a multiple of cpk, cout leaving remainder
+# f_blocks, 1x1 and 3x3 windows, both fpga layouts
+RAGGED = [
+    (3, 11, 10, 4, True), (3, 16, 32, 12, True), (1, 20, 9, 4, True),
+    (3, 5, 12, 4, False), (1, 7, 9, 4, False),
+]
+
+
+@pytest.mark.parametrize("kx,cin,cout,n_cu,packed", RAGGED)
+def test_implicit_index_table_roundtrips_im2col(kx, cin, cout, n_cu, packed):
+    """Property: gathering the padded NHWC activation through the
+    offset-augmented index table reconstructs exactly the live column
+    blocks of the materialized packed im2col matrix — the two kernels'
+    shared data contract."""
+    rng = np.random.RandomState(kx * 1000 + cin * 10 + n_cu)
+    spec = fpga_conv_groups((kx, kx, cin, cout), n_cu)
+    layout = conv_gemm_layout(spec, packed=packed)
+    gm = _group_mask(rng, spec.num_groups, 0.5)
+    entries, cnt, taps = layout.implicit_index_table(gm)
+    geo = layout.implicit_geometry()
+    plan = layout.plan(gm)
+    assert entries.shape == (*plan.idx.shape, 3)
+    np.testing.assert_array_equal(cnt, plan.cnt)
+    assert taps.shape == (kx * kx, 3)
+
+    stride, padding = 2, "SAME"
+    x = rng.randn(2, 7, 6, cin).astype(np.float32)
+    # the materialized side of the contract
+    patches = CL.im2col_patches(jnp.asarray(x), kx, kx, stride, padding)
+    B, Ho, Wo = patches.shape[:3]
+    packed_patches = np.asarray(layout.pack_patches(patches))
+    # the implicit side: gather via the table from the padded activation
+    (pt, pb), (pl_, pr) = (CL.same_pads(7, kx, stride),
+                           CL.same_pads(6, kx, stride))
+    xp = np.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+    bk = layout.block[0]
+    slot, cpk = geo["slot"], geo["cpk"]
+    rebuilt = np.zeros_like(packed_patches)
+    for j in range(entries.shape[0]):
+        for s in range(int(cnt[j])):
+            t, c0, cn = entries[j, s]
+            for c in range(cn):
+                for row_slot, dy, dx in taps:
+                    col = t * bk + c * slot + row_slot
+                    vals = xp[:, dy:dy + (Ho - 1) * stride + 1:stride,
+                              dx:dx + (Wo - 1) * stride + 1:stride, c0 + c]
+                    rebuilt[:, col] = vals.reshape(-1)
+    # compare live K-tile column blocks (dead tiles are never dispatched)
+    live = sorted({int(t) for j in range(entries.shape[0])
+                   for t in plan.idx[j, :plan.cnt[j]]})
+    for t in live:
+        np.testing.assert_array_equal(rebuilt[:, t * bk:(t + 1) * bk],
+                                      packed_patches[:, t * bk:(t + 1) * bk],
+                                      err_msg=f"K-tile {t}")
+
+
+def test_implicit_index_table_rejects_tap_major_layouts():
+    spec = tpu_tile_groups((3 * 3 * 5, 20), (32, 128))
+    layout = conv_gemm_layout(spec)
+    with pytest.raises(ValueError, match="channel-major"):
+        layout.implicit_index_table(np.ones(spec.num_groups))
+    with pytest.raises(ValueError, match="channel-major"):
+        make_sparse_conv(layout, np.ones(spec.num_groups), implicit=True)
+
+
+def test_choose_m_block_invariants():
+    """Adaptive M-blocking: bm is the 8-aligned whole-row block under the
+    cap, maximal, and the blocks tile the output height."""
+    for ho, wo in [(1, 1), (4, 4), (8, 8), (16, 16), (9, 7), (17, 3),
+                   (32, 32), (5, 128), (3, 40)]:
+        block_oh, bm, bpi = IC.choose_m_block(ho, wo)
+        assert bm == -(-block_oh * wo // 8) * 8 and bm <= 128
+        assert bpi * block_oh >= ho > (bpi - 1) * block_oh
+        if block_oh < ho:          # maximality: one more row would overflow
+            assert -(-(block_oh + 1) * wo // 8) * 8 > 128
+    # batch-1 tails stop padding to 128
+    assert IC.choose_m_block(4, 4)[1] == 16
+    assert IC.choose_m_block(8, 8)[1] == 64
+    # wider than the cap: no whole-row block fits
+    assert IC.choose_m_block(4, 129) is None
+    assert adaptive_bm(16) == 16 and adaptive_bm(3) == 8
+    assert adaptive_bm(10_000) == 128
+    # accounting helper agrees with the kernel's blocking
+    mb, bm = conv_m_blocks(8, 8, batch=3, bm="auto", implicit=True)
+    assert (mb, bm) == (3 * IC.choose_m_block(8, 8)[2],
+                        IC.choose_m_block(8, 8)[1])
+    mb, bm = conv_m_blocks(8, 8, batch=3, bm="auto", implicit=False)
+    assert (mb, bm) == (-(-3 * 64 // 128), 128)
+
+
+def test_implicit_falls_back_to_materializing(monkeypatch):
+    """Wide images (no whole-row M-block under the cap) and over-budget
+    activation slabs fall back to the materializing path — same closure,
+    same result."""
+    rng = np.random.RandomState(5)
+    spec = fpga_conv_groups((1, 1, 4, 8), 4)
+    gm = _group_mask(rng, spec.num_groups, 0.5)
+    w = jnp.asarray(rng.randn(1, 1, 4, 8).astype(np.float32))
+    wm = w * spec.expand(jnp.asarray(gm))
+    conv = make_sparse_conv(conv_gemm_layout(spec, packed=True), gm, weight=w,
+                            implicit=True)
+    # 130-wide rows: choose_m_block -> None -> materializing path
+    x = jnp.asarray(rng.randn(1, 2, 130, 4).astype(np.float32))
+    out = conv(x, stride=1, padding="SAME")
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(CL.conv_via_matmul(x, wm)),
+        rtol=1e-5, atol=1e-5)
+    # slab over the VMEM budget: same fallback, still exact
+    x2 = jnp.asarray(rng.randn(1, 6, 5, 4).astype(np.float32))
+    expect = CL.conv_via_matmul(x2, wm)
+    monkeypatch.setattr(IC, "SLAB_VMEM_BUDGET", 16)
+    out2 = conv(x2, stride=1, padding="SAME")
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_conv_via_matmul_out_dtype_keeps_f32_accumulation():
+    """The default oracle used to downcast through astype(a.dtype); bf16
+    callers (e.g. folded-BN comparisons) can now keep the accumulator."""
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(1, 6, 6, 8), jnp.bfloat16)
+    w = jnp.asarray(rng.randn(3, 3, 8, 8), jnp.bfloat16)
+    out_bf16 = CL.conv_via_matmul(x, w)
+    out_f32 = CL.conv_via_matmul(x, w, out_dtype=jnp.float32)
+    assert out_bf16.dtype == jnp.bfloat16 and out_f32.dtype == jnp.float32
+    # the f32 output carries strictly more precision than its downcast
+    np.testing.assert_array_equal(np.asarray(out_f32.astype(jnp.bfloat16)),
+                                  np.asarray(out_bf16))
+    assert float(jnp.max(jnp.abs(out_f32 - out_f32.astype(jnp.bfloat16)
+                                 .astype(jnp.float32)))) > 0.0
+
+
+def _pruned_tiny_resnet(target=0.5, n_cu=4):
+    cfg = cnn.ResNetConfig(stages=(1, 1), widths=(8, 16), image_size=16)
+    params, state = cnn.init(jax.random.PRNGKey(0), cfg)
+    params = jax.tree_util.tree_map_with_path(
+        lambda p, l: l / jnp.std(l) * 0.1 if cnn.is_conv_weight(p, l) else l,
+        params)
+    from repro.core import (HAPMConfig, apply_masks, hapm_element_masks,
+                            hapm_epoch_update, hapm_init)
+    specs = cnn.conv_group_specs(params, n_cu)
+    hcfg = HAPMConfig(target, 1)
+    st = hapm_init(specs, hcfg)
+    st = hapm_epoch_update(st, specs, params, hcfg)
+    pruned = apply_masks(params, hapm_element_masks(specs, st))
+    return cfg, pruned, state, specs, st
+
+
+def test_implicit_exec_end_to_end_matches_materializing():
+    """build_sparse_execution(implicit=True) == implicit=False == dense on
+    a HAPM-pruned net, with identical schedule accounting and strictly
+    fewer analytic HBM bytes (kernel layers bound on both paths)."""
+    n_cu = 4
+    cfg, pruned, state, specs, st = _pruned_tiny_resnet(0.5, n_cu)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    dense, _ = cnn.apply(pruned, state, x, cfg)
+    execs = {}
+    for implicit in (True, False):
+        e = cnn.build_sparse_execution(
+            pruned, n_cu=n_cu, specs=specs, group_masks=st.group_masks,
+            packed=True, implicit=implicit, dense_fallback=2.0)
+        out, _ = cnn.apply(pruned, state, x, cfg, sparse=e)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                                   rtol=1e-4, atol=1e-4)
+        execs[implicit] = e
+    assert execs[True].implicit and not execs[False].implicit
+    assert (execs[True].schedule_step_counts()
+            == execs[False].schedule_step_counts())
+    assert (execs[True].hbm_bytes(cfg, batch=1)
+            < execs[False].hbm_bytes(cfg, batch=1, bm=128))
+    # adaptive bm engages on the 8x8 tail layers
+    bms = execs[True].bm_effective(cfg, batch=1)
+    assert bms["s1b0/conv2/w"] == 64 and bms["conv0/w"] == 128
+    # M-padding-aware utilization: adaptive recovers the batch-1 tail
+    assert (execs[True].mac_utilization(cfg, batch=1)
+            > execs[False].mac_utilization(cfg, batch=1, bm=128))
+
+
+def test_conv_hbm_bytes_contract():
+    """The analytic byte counts encode the contract change: the implicit
+    path never pays the patch-matrix write, the materializing path does."""
+    spec = fpga_conv_groups((3, 3, 16, 32), 12)
+    layout = conv_gemm_layout(spec, packed=True)
+    gm = np.ones(spec.num_groups, np.float32)
+    imp = conv_hbm_bytes(layout, gm, 1, 16, 16, implicit=True)
+    mat = conv_hbm_bytes(layout, gm, 1, 16, 16, implicit=False, bm=128)
+    assert 0 < imp < mat
+    # pruning everything leaves only the output write on both paths
+    gm0 = np.zeros(spec.num_groups, np.float32)
+    assert conv_hbm_bytes(layout, gm0, 1, 16, 16, implicit=True) < imp
