@@ -65,8 +65,9 @@ def main(argv=None):
     print("\nexecuted sparse inference (block-sparse Pallas path):")
     board12 = BOARDS["zedboard_100mhz_72dsp"]          # n_cu = 12
     r12 = simulate(m4.params, m4.state, m4.cfg, board12)
-    # quantized=True: prepack the same Q2.5 weights the dense QAT forward
-    # uses, so the parity check below compares like for like
+    # quantized=True: every bound conv runs int8 Q2.5×Q3.4 codes with
+    # int32 accumulation — the same arithmetic the QAT forward fakes in
+    # f32, so the parity below is exact on codes, not a float tolerance
     exec_ = cnn.build_sparse_execution(m4.params, n_cu=board12.n_cu,
                                        quantized=True)
     small = imgs[:2]
@@ -78,6 +79,24 @@ def main(argv=None):
           f"({executed / dense_steps:.2f} of dense) | "
           f"DSB cycle ratio {r12.dsb_cycle_ratio:.2f} | "
           f"max |sparse - dense| = {err:.2e}")
+    # executed-int8 vs QAT parity: the int32 kernels and the f32 fake-quant
+    # forward are the same exact integer arithmetic, so the logits must be
+    # bitwise-identical arrays (strictly stronger than any code comparison).
+    # Precondition: the f32 reference is itself exact (K·127² < 2^24 — true
+    # for the paper CNN, max K = 3·3·64; guarded so config growth fails
+    # with the right message, not a bogus "int8 diverged")
+    from repro.core import quant as Q
+    assert Q.f32_parity_is_exact(max(3 * 3 * c for c in m4.cfg.widths)), \
+        "config outgrew the f32-exactness bound — compare with a tolerance"
+    assert bool(jnp.array_equal(sparse_logits, dense_logits)), err
+    code_delta = int(jnp.max(jnp.abs(Q.to_int(sparse_logits, Q.Q3_4)
+                                     - Q.to_int(dense_logits, Q.Q3_4))))
+    hbm_q = exec_.hbm_bytes(m4.cfg, batch=1)
+    hbm_f = exec_.hbm_bytes(m4.cfg, batch=1, operand_bytes=4)
+    print(f"  executed-int8 vs QAT logits: exact on codes "
+          f"(max |Δ Q3.4 code| = {code_delta}) | "
+          f"int8 operand HBM bytes/image {hbm_q} "
+          f"({hbm_q / hbm_f:.2f}x of f32 operands)")
 
 
 if __name__ == "__main__":

@@ -57,16 +57,27 @@ class SimulationReport:
     # HBM data-movement contract per image on the packed layout:
     # materializing (im2col patch matrix in HBM, fixed bm=128 — the PR-3
     # execution) vs implicit (in-kernel window gather from the NHWC
-    # activation, adaptive bm). Per-layer numbers sit in
-    # grid_steps_per_layer ("hbm_materialized"/"hbm_implicit") next to
-    # the grid steps; bm_effective_per_layer is the adaptive M-block.
+    # activation, adaptive bm), each priced with f32 operands AND with
+    # int8 Q2.5×Q3.4 operand codes (the quantized execution: 1-byte
+    # slabs/patches/weight tiles, f32 output writes). Per-layer numbers
+    # sit in grid_steps_per_layer ("hbm_materialized"/"hbm_implicit"/
+    # "hbm_implicit_int8") next to the grid steps; bm_effective_per_layer
+    # is the adaptive M-block.
     hbm_bytes_materialized: int = 0
     hbm_bytes_implicit: int = 0
+    hbm_bytes_materialized_int8: int = 0
+    hbm_bytes_implicit_int8: int = 0
     bm_effective_per_layer: dict = dataclasses.field(default_factory=dict)
 
     @property
     def hbm_bytes_ratio(self) -> float:
         return self.hbm_bytes_implicit / max(self.hbm_bytes_materialized, 1)
+
+    @property
+    def hbm_bytes_int8_ratio(self) -> float:
+        """Quantized-over-f32 operand traffic on the implicit contract —
+        what halving (×4) the operand bytes buys on top of pruning."""
+        return self.hbm_bytes_implicit_int8 / max(self.hbm_bytes_implicit, 1)
 
     @property
     def grid_step_ratio(self) -> float:
@@ -104,6 +115,9 @@ class SimulationReport:
             "hbm_bytes_materialized": self.hbm_bytes_materialized,
             "hbm_bytes_implicit": self.hbm_bytes_implicit,
             "hbm_bytes_ratio": self.hbm_bytes_ratio,
+            "hbm_bytes_materialized_int8": self.hbm_bytes_materialized_int8,
+            "hbm_bytes_implicit_int8": self.hbm_bytes_implicit_int8,
+            "hbm_bytes_int8_ratio": self.hbm_bytes_int8_ratio,
         }
 
 
@@ -145,7 +159,7 @@ def simulate(
     group_masks, layer_sparsity = [], {}
     grid_steps, tot_exec, tot_dense = {}, 0, 0
     pk_exec = pk_dense = sched_live = sched_total = 0
-    hbm_mat = hbm_imp = 0
+    hbm_mat = hbm_imp = hbm_mat_q = hbm_imp_q = 0
     bm_eff_per_layer = {}
     util_num = {"packed": 0.0, "pergroup": 0.0}
     util_den = {"packed": 0.0, "pergroup": 0.0}
@@ -179,15 +193,26 @@ def simulate(
                                "SAME", implicit=False, bm=128)
         h_imp = conv_hbm_bytes(layouts["packed"], gm, 1, feat, feat, stride,
                                "SAME", implicit=True, bm="auto")
+        # the quantized execution: int8 operand codes, f32 output writes
+        h_mat_q = conv_hbm_bytes(layouts["packed"], gm, 1, feat, feat, stride,
+                                 "SAME", implicit=False, bm=128,
+                                 operand_bytes=1)
+        h_imp_q = conv_hbm_bytes(layouts["packed"], gm, 1, feat, feat, stride,
+                                 "SAME", implicit=True, bm="auto",
+                                 operand_bytes=1)
         bm_eff_per_layer["/".join(path)] = conv_m_blocks(
             layer.out_x, layer.out_y, 1, bm="auto", implicit=True)[1]
         grid_steps["/".join(path)] = {"executed": ex, "dense": dn,
                                       "packed_executed": ex_pk,
                                       "packed_dense": dn_pk,
                                       "hbm_materialized": h_mat,
-                                      "hbm_implicit": h_imp}
+                                      "hbm_implicit": h_imp,
+                                      "hbm_materialized_int8": h_mat_q,
+                                      "hbm_implicit_int8": h_imp_q}
         hbm_mat += h_mat
         hbm_imp += h_imp
+        hbm_mat_q += h_mat_q
+        hbm_imp_q += h_imp_q
         tot_exec += ex
         tot_dense += dn
         pk_exec += ex_pk
@@ -235,6 +260,8 @@ def simulate(
                                   if util_den["pergroup"] else 0.0),
         hbm_bytes_materialized=hbm_mat,
         hbm_bytes_implicit=hbm_imp,
+        hbm_bytes_materialized_int8=hbm_mat_q,
+        hbm_bytes_implicit_int8=hbm_imp_q,
         bm_effective_per_layer=bm_eff_per_layer,
     )
 
@@ -242,10 +269,10 @@ def simulate(
 def _capture_conv_inputs(params, state, cfg, x):
     """Forward pass capturing each conv layer's (quantized) input, exec order."""
     acts = []
-    h = x
-    acts.append(h)  # conv0 input
     qw = lambda w: Q.quantize(w, Q.Q2_5)
     qa = lambda a: Q.quantize(a, Q.Q3_4)
+    h = qa(x)       # the accelerator ingests Q3.4 codes, input frame included
+    acts.append(h)  # conv0 input
     conv = cnn._conv
     bn = lambda y, p, s: cnn._bn(y, p, s, False, cfg)[0]
     h1 = bn(conv(h, qw(params["conv0"]["w"]), 1), params["bn0"], state["bn0"])

@@ -26,4 +26,5 @@ from .masks import (
     count_params,
 )
 from .uniform import UniformPruneConfig, magnitude_masks, maybe_update, sparsity_at
-from .quant import QFormat, Q2_5, Q3_4, quantize, fake_quant, to_int, from_int
+from .quant import (QFormat, Q2_5, Q3_4, QuantSpec, quantize, fake_quant,
+                    round_sat, to_int, to_int8, from_int)

@@ -6,15 +6,24 @@ K-tiles of each output column: the BlockSpec index maps read ``idx[j, s]``,
 so pruned tiles cost neither MXU cycles nor HBM→VMEM DMA. ``pl.when``
 guards the ragged tail (columns with fewer live tiles than ``max_nnz``).
 
-Optional fused epilogue at the flush step: a per-column ``bias`` add
-(f32, broadcast over rows) and ``relu`` — folded-BN inference
-(conv → +b → ReLU) runs entirely inside the kernel, no extra HBM round
-trip for the activation. Fully-pruned columns still flush ``bias``
-(then ReLU), matching the dense ``conv(x, 0) + b`` semantics.
+Operands are f32/bf16 (f32 accumulation) **or int8 codes** — the paper's
+Q3.4 × Q2.5 fixed point on the MXU's int8 path. int8 operands accumulate
+in **int32** (exact integer arithmetic, bit-identical to the reference)
+and require a ``scale`` row; the output is the dequantized f32.
 
-VMEM working set = ``bm·bk + bk·bn + bm·bn(f32 acc)`` — (128,128,128)
-defaults keep it ≈ 192 KiB, far under the ~16 MiB/core budget, and every
-matmul dim is a multiple of the 128-lane MXU width.
+Optional fused epilogue at the flush step, in dequant → bias → ReLU
+order: a per-column ``scale`` multiply (f32 ``(N,)`` row — the int8
+dequant, ``out = acc * scale``, per-cout weight scales supported), a
+per-column ``bias`` add (f32, broadcast over rows) and ``relu`` —
+folded-BN inference (conv → +b → ReLU) runs entirely inside the kernel,
+no extra HBM round trip for the activation. Fully-pruned columns still
+flush ``bias`` (then ReLU), matching the dense ``conv(x, 0) + b``
+semantics.
+
+VMEM working set = ``bm·bk + bk·bn + bm·bn(acc)`` — (128,128,128)
+defaults keep it ≈ 192 KiB f32 (int8 operands halve the operand tiles),
+far under the ~16 MiB/core budget, and every matmul dim is a multiple of
+the 128-lane MXU width.
 """
 from __future__ import annotations
 
@@ -29,9 +38,62 @@ from jax.experimental.pallas import tpu as pltpu
 from ..dist.compat import tpu_compiler_params
 
 
-def _kernel(idx_ref, cnt_ref, x_ref, w_ref, *refs, has_bias, relu):
-    b_ref = refs[0] if has_bias else None
-    o_ref, acc_ref = refs[-2], refs[-1]
+# --- shared epilogue contract (also consumed by kernels.implicit_conv) ----
+# Both block-sparse kernels carry the identical optional [scale?, bias?]
+# trailing operands and the identical dequant -> bias -> ReLU flush; keep
+# the plumbing in ONE place so the kernels cannot drift apart (the bench
+# asserts their bit-parity).
+
+def quantized_contract(x, w, scale):
+    """-> (acc_dtype, out_dtype) for the operand dtypes, validating the
+    int8-code contract: int8 × int8 accumulates exactly in int32 and
+    needs a dequant ``scale`` row to emit float output."""
+    if x.dtype == jnp.int8:
+        assert w.dtype == jnp.int8, "int8 x needs int8 w (codes × codes)"
+        assert scale is not None, (
+            "int8 operands accumulate integer codes — pass the dequant "
+            "scale row so the flush epilogue can emit float output")
+        return jnp.int32, jnp.float32
+    return jnp.float32, x.dtype
+
+
+def unpack_epilogue_refs(refs, has_scale, has_bias):
+    """Kernel-side view of the trailing operands: ``refs`` is
+    ``[scale?, bias?, o_ref, acc_ref]`` -> (scale_ref, b_ref, o_ref, acc_ref)."""
+    extra = refs[:-2]
+    scale_ref = extra[0] if has_scale else None
+    b_ref = extra[1 if has_scale else 0] if has_bias else None
+    return scale_ref, b_ref, refs[-2], refs[-1]
+
+
+def flush_epilogue(acc, scale_ref, b_ref, relu):
+    """dequant → bias → ReLU on the flushed accumulator, f32."""
+    out = acc
+    if scale_ref is not None:           # int8 path: dequant the int32 acc
+        out = out.astype(jnp.float32) * scale_ref[...]
+    if b_ref is not None:
+        out = out.astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def append_epilogue_inputs(in_specs, inputs, scale, bias, bn):
+    """Host-side twin of :func:`unpack_epilogue_refs`: append the
+    ``(1, bn)``-blocked scale/bias rows (both kernels share the
+    ``(i, j, s, idx, cnt)`` index-map arity)."""
+    for row, cast in ((scale, jnp.float32), (bias, None)):
+        if row is not None:
+            in_specs.append(
+                pl.BlockSpec((1, bn), lambda i, j, s, idx, cnt: (0, j)))
+            r2 = row.reshape(1, -1)
+            inputs.append(r2.astype(cast) if cast is not None else r2)
+
+
+def _kernel(idx_ref, cnt_ref, x_ref, w_ref, *refs, acc_dtype, has_scale,
+            has_bias, relu):
+    scale_ref, b_ref, o_ref, acc_ref = unpack_epilogue_refs(
+        refs, has_scale, has_bias)
     j, s = pl.program_id(1), pl.program_id(2)
 
     @pl.when(s == 0)
@@ -41,26 +103,23 @@ def _kernel(idx_ref, cnt_ref, x_ref, w_ref, *refs, has_bias, relu):
     @pl.when(s < cnt_ref[j])
     def _compute():
         acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
-                                preferred_element_type=jnp.float32)
+                                preferred_element_type=acc_dtype)
 
     @pl.when(s == pl.num_programs(2) - 1)
     def _flush():
-        out = acc_ref[...]
-        if has_bias:
-            out = out + b_ref[...].astype(jnp.float32)
-        if relu:
-            out = jnp.maximum(out, 0.0)
+        out = flush_epilogue(acc_ref[...], scale_ref, b_ref, relu)
         o_ref[...] = out.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block", "bm", "relu", "interpret"))
 def block_sparse_matmul(
-    x: jnp.ndarray,            # (M, K)
-    w: jnp.ndarray,            # (K, N)
+    x: jnp.ndarray,            # (M, K) f32/bf16, or int8 codes
+    w: jnp.ndarray,            # (K, N) same family as x
     idx: jnp.ndarray,          # (nNb, max_nnz) int32
     cnt: jnp.ndarray,          # (nNb,) int32
-    bias: Optional[jnp.ndarray] = None,   # (N,) fused epilogue bias
+    bias: Optional[jnp.ndarray] = None,   # (N,) fused epilogue bias (f32 units)
+    scale: Optional[jnp.ndarray] = None,  # (N,) fused dequant row (f32)
     *,
     block: Tuple[int, int] = (128, 128),
     bm: int = 128,
@@ -72,31 +131,34 @@ def block_sparse_matmul(
     bk, bn = block
     assert Kw == K and K % bk == 0 and N % bn == 0 and M % bm == 0, (
         f"shapes must be tile-aligned: {x.shape} @ {w.shape}, block={block}, bm={bm}")
+    acc_dtype, out_dtype = quantized_contract(x, w, scale)
     nNb = N // bn
     max_nnz = idx.shape[1]
+    has_scale = scale is not None
     has_bias = bias is not None
+    for name, row in (("scale", scale), ("bias", bias)):
+        assert row is None or row.shape == (N,), \
+            f"{name} must be ({N},), got {row.shape}"
 
     in_specs = [
         pl.BlockSpec((bm, bk), lambda i, j, s, idx, cnt: (i, idx[j, s])),
         pl.BlockSpec((bk, bn), lambda i, j, s, idx, cnt: (idx[j, s], j)),
     ]
     inputs = [idx, cnt, x, w]
-    if has_bias:
-        assert bias.shape == (N,), f"bias must be ({N},), got {bias.shape}"
-        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s, idx, cnt: (0, j)))
-        inputs.append(bias.reshape(1, N))
+    append_epilogue_inputs(in_specs, inputs, scale, bias, bn)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(M // bm, nNb, max_nnz),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s, idx, cnt: (i, j)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
     )
     return pl.pallas_call(
-        functools.partial(_kernel, has_bias=has_bias, relu=relu),
+        functools.partial(_kernel, acc_dtype=acc_dtype, has_scale=has_scale,
+                          has_bias=has_bias, relu=relu),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         interpret=interpret,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),

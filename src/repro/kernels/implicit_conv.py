@@ -31,6 +31,12 @@ never written at all. VMEM working set adds one activation slab
 (``Hp·Wp·cpk``); :data:`SLAB_VMEM_BUDGET` bounds it, callers fall back
 to the materializing oracle above it (and for very wide images where no
 whole-row M-block fits the cap).
+
+Operands may be **int8 Q-format codes** (the paper's Q3.4 activations ×
+Q2.5 coefficients): the in-VMEM gather is dtype-agnostic, accumulation
+switches to exact int32, and the flush epilogue dequantizes through a
+per-cout ``scale`` row before bias/ReLU — one byte per operand element
+moved instead of four, on exactly the same grid and index table.
 """
 from __future__ import annotations
 
@@ -43,6 +49,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..dist.compat import tpu_compiler_params
+from .block_sparse_matmul import (append_epilogue_inputs, flush_epilogue,
+                                  quantized_contract, unpack_epilogue_refs)
 from .conv_lowering import same_pads
 
 # Largest activation slab (bytes) the implicit kernel will hold in VMEM.
@@ -92,9 +100,9 @@ def pad_input(x: jnp.ndarray, kx: int, ky: int, stride: int, padding: str,
 
 def _kernel(idx_ref, cnt_ref, x_ref, w_ref, *refs,
             kx, ky, stride, block_oh, bpi, wo, cpk, slot, bm, bk,
-            has_bias, relu):
-    b_ref = refs[0] if has_bias else None
-    o_ref, acc_ref = refs[-2], refs[-1]
+            acc_dtype, has_scale, has_bias, relu):
+    scale_ref, b_ref, o_ref, acc_ref = unpack_epilogue_refs(
+        refs, has_scale, has_bias)
     i, j, s = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when(s == 0)
@@ -121,15 +129,11 @@ def _kernel(idx_ref, cnt_ref, x_ref, w_ref, *refs,
         if bm > block_oh * wo or bk > cpk * slot:
             p = jnp.pad(p, ((0, bm - block_oh * wo), (0, bk - cpk * slot)))
         acc_ref[...] += jnp.dot(p, w_ref[...],
-                                preferred_element_type=jnp.float32)
+                                preferred_element_type=acc_dtype)
 
     @pl.when(s == pl.num_programs(2) - 1)
     def _flush():
-        out = acc_ref[...]
-        if has_bias:
-            out = out + b_ref[...].astype(jnp.float32)
-        if relu:
-            out = jnp.maximum(out, 0.0)
+        out = flush_epilogue(acc_ref[...], scale_ref, b_ref, relu)
         o_ref[...] = out.astype(o_ref.dtype)
 
 
@@ -138,10 +142,11 @@ def _kernel(idx_ref, cnt_ref, x_ref, w_ref, *refs,
     "slot", "relu", "interpret"))
 def implicit_block_sparse_conv(
     xp: jnp.ndarray,           # (B, Hp, Wp, nKb*cpk) pad_input() output
-    w: jnp.ndarray,            # (nKb*bk, nNb*bn) packed weight
+    w: jnp.ndarray,            # (nKb*bk, nNb*bn) packed weight (f32/bf16/int8)
     idx: jnp.ndarray,          # (nNb, max_nnz) int32 live K-tile (= cin-block) ids
     cnt: jnp.ndarray,          # (nNb,) int32
     bias: Optional[jnp.ndarray] = None,    # (nNb*bn,) fused epilogue bias
+    scale: Optional[jnp.ndarray] = None,   # (nNb*bn,) fused dequant row (int8)
     *,
     kx: int, ky: int, stride: int,
     block_oh: int, bpi: int, wo: int,
@@ -152,14 +157,21 @@ def implicit_block_sparse_conv(
     """-> (B*bpi*bm, nNb*bn). Rows of M-block ``(b, p)`` start at
     ``(b*bpi + p)*bm``; the first ``block_oh*wo`` are output pixels
     ``(p*block_oh .. )*wo`` of image ``b`` row-major, the rest padding
-    (crop with the output-row mapping, see ``conv_plan.make_sparse_conv``)."""
+    (crop with the output-row mapping, see ``conv_plan.make_sparse_conv``).
+
+    int8 operands (``xp``/``w`` are Q-format codes): the gather works on
+    codes, accumulation is exact **int32**, and the flush epilogue
+    dequantizes through the per-cout ``scale`` row (then bias, then ReLU)
+    — output is f32. Same contract as :mod:`block_sparse_matmul`."""
     B, Hp, Wp, Cp = xp.shape
     bk, bn = block
     assert Cp % cpk == 0 and w.shape[0] % bk == 0 and w.shape[1] % bn == 0, (
         f"packed shapes off-grid: x {xp.shape} (cpk={cpk}), w {w.shape}, "
         f"block={block}")
+    acc_dtype, out_dtype = quantized_contract(xp, w, scale)
     nNb = w.shape[1] // bn
     max_nnz = idx.shape[1]
+    has_scale = scale is not None
     has_bias = bias is not None
 
     in_specs = [
@@ -168,24 +180,23 @@ def implicit_block_sparse_conv(
         pl.BlockSpec((bk, bn), lambda i, j, s, idx, cnt: (idx[j, s], j)),
     ]
     inputs = [idx, cnt, xp, w]
-    if has_bias:
-        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s, idx, cnt: (0, j)))
-        inputs.append(bias.reshape(1, -1))
+    append_epilogue_inputs(in_specs, inputs, scale, bias, bn)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B * bpi, nNb, max_nnz),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s, idx, cnt: (i, j)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
     )
     return pl.pallas_call(
         functools.partial(_kernel, kx=kx, ky=ky, stride=stride,
                           block_oh=block_oh, bpi=bpi, wo=wo, cpk=cpk,
-                          slot=slot, bm=bm, bk=bk, has_bias=has_bias,
+                          slot=slot, bm=bm, bk=bk, acc_dtype=acc_dtype,
+                          has_scale=has_scale, has_bias=has_bias,
                           relu=relu),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B * bpi * bm, w.shape[1]), xp.dtype),
+        out_shape=jax.ShapeDtypeStruct((B * bpi * bm, w.shape[1]), out_dtype),
         interpret=interpret,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),

@@ -32,7 +32,8 @@ def _pad_rows(x2d: jnp.ndarray, bm: int):
 
 
 def make_block_sparse_matmul(plan: BlockSparsePlan, tile_mask: np.ndarray, *,
-                             bm: int = 128, bias=None, relu: bool = False):
+                             bm: int = 128, bias=None, relu: bool = False,
+                             scale=None):
     """Build ``f(x, w) -> x @ (w ⊙ mask)`` for a *fixed* pruning plan.
 
     The plan is static (recompiled when HAPM prunes more groups — an
@@ -43,19 +44,24 @@ def make_block_sparse_matmul(plan: BlockSparsePlan, tile_mask: np.ndarray, *,
     ``bias`` (a length-N vector in the *packed* column layout) and/or
     ``relu`` fuse the inference epilogue into the kernel's flush step;
     that variant is forward-only (no custom VJP) — it exists for the
-    folded-BN inference path, not training.
+    folded-BN inference path, not training. ``scale`` (same packed column
+    layout) is the int8 dequant row: pass it together with int8 code
+    operands and the kernel accumulates in int32, flushing
+    ``acc * scale (+ bias) (relu)`` as f32 — also forward-only.
     """
     idx, cnt = jnp.asarray(plan.idx), jnp.asarray(plan.cnt)
     block = plan.block
 
-    if bias is not None or relu:
+    if bias is not None or relu or scale is not None:
         b = None if bias is None else jnp.asarray(bias, jnp.float32)
+        sc = None if scale is None else jnp.asarray(scale, jnp.float32)
 
         def f_epilogue(x, w):
             lead = x.shape[:-1]
             xp, M = _pad_rows(x.reshape(-1, x.shape[-1]), bm)
-            out = block_sparse_matmul(xp, w, idx, cnt, b, block=block, bm=bm,
-                                      relu=relu, interpret=_interpret())[:M]
+            out = block_sparse_matmul(xp, w, idx, cnt, b, sc, block=block,
+                                      bm=bm, relu=relu,
+                                      interpret=_interpret())[:M]
             return out.reshape(*lead, w.shape[1])
 
         return f_epilogue
@@ -110,8 +116,8 @@ def fixed_point_matmul(
 
     @jax.custom_vjp
     def f(x, w):
-        xc = Q.to_int(x, x_fmt).astype(jnp.int8).reshape(-1, K)
-        wc = Q.to_int(w, w_fmt).astype(jnp.int8)
+        xc = Q.to_int8(x, x_fmt).reshape(-1, K)
+        wc = Q.to_int8(w, w_fmt)
         xp, M = _pad_rows(xc, bm)
         scale = jnp.asarray([1.0 / (x_fmt.scale * w_fmt.scale)], jnp.float32)
         out = int8_matmul(xp, wc, scale, bm=bm, interpret=_interpret())[:M]

@@ -22,15 +22,37 @@ def block_sparse_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, tile_mask: jnp.ndarr
     return jnp.dot(x, w * m, preferred_element_type=jnp.float32).astype(x.dtype)
 
 
-def int8_matmul_ref(x_codes: jnp.ndarray, w_codes: jnp.ndarray, scale: float) -> jnp.ndarray:
-    """int8 codes GEMM with int32 accumulation and scalar dequant epilogue.
+def int8_matmul_ref(x_codes: jnp.ndarray, w_codes: jnp.ndarray, scale) -> jnp.ndarray:
+    """int8 codes GEMM with int32 accumulation and dequant epilogue.
 
     Bit-exact contract: out = (x_codes · w_codes) * scale computed in int32.
-    (Q3.4 activations × Q2.5 weights -> scale = 2^-4 · 2^-5.)
+    ``scale`` is a scalar (Q3.4 activations × Q2.5 weights -> 2^-4 · 2^-5)
+    or a per-cout ``(N,)`` row broadcast over the M rows.
     """
     acc = jnp.dot(x_codes.astype(jnp.int32), w_codes.astype(jnp.int32),
                   preferred_element_type=jnp.int32)
     return acc.astype(jnp.float32) * scale
+
+
+def int8_conv_ref(x_codes: jnp.ndarray, w_codes: jnp.ndarray,
+                  scale, stride: int = 1, padding: str = "SAME",
+                  bias=None, relu: bool = False) -> jnp.ndarray:
+    """Fixed-point conv oracle: im2col the int8 activation codes, int32-
+    accumulate against the HWIO int8 weight codes, dequant through the
+    per-cout ``scale`` row, then bias/ReLU — the exact arithmetic the
+    quantized block-sparse kernels must reproduce bitwise."""
+    from .conv_lowering import im2col_patches
+
+    kx, ky, cin, cout = w_codes.shape
+    p = im2col_patches(x_codes, kx, ky, stride, padding)
+    B, Ho, Wo = p.shape[:3]
+    out = int8_matmul_ref(p.reshape(B * Ho * Wo, kx * ky * cin),
+                          w_codes.reshape(kx * ky * cin, cout), scale)
+    if bias is not None:
+        out = out + jnp.asarray(bias, jnp.float32)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.reshape(B, Ho, Wo, cout)
 
 
 def masked_dense_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:

@@ -159,7 +159,10 @@ def apply(
         return _conv(h, w, stride)
 
     new_state: dict = {}
-    h = conv(("conv0", "w"), x, _maybe_qw(params["conv0"]["w"], cfg), 1)
+    # the accelerator ingests Q3.4 activations for every layer, the input
+    # frame included — quantize it so the executed-int8 path can match the
+    # QAT forward exactly on codes (images are 8-bit sources anyway)
+    h = conv(("conv0", "w"), _maybe_qa(x, cfg), _maybe_qw(params["conv0"]["w"], cfg), 1)
     h, new_state["bn0"] = _bn(h, params["bn0"], state["bn0"], train, cfg)
     h = _maybe_qa(jax.nn.relu(h), cfg)
     for si, n_blocks in enumerate(cfg.stages):
@@ -239,7 +242,7 @@ class SparseConvExec:
     n_cu: int
     layouts: Any = None              # {path: ConvGemmLayout}
     group_masks_np: Any = None       # {path: (num_groups,) float}
-    quantized: bool = False          # weights Q2.5-quantized before packing
+    quantized: bool = False          # int8-code operands, int32-accumulate kernels
     folded: bool = False             # bias/ReLU epilogue fused (apply_folded only)
     bound_weights: Any = None        # {path: source weight} — staleness check
     implicit: bool = False           # convs bound to the implicit-im2col kernel
@@ -272,20 +275,26 @@ class SparseConvExec:
                 for path, stride, feat in conv_layer_order(cfg)}
 
     def hbm_bytes(self, cfg: ResNetConfig, batch: int = 1,
-                  implicit: Any = None, bm=None, dtype_bytes: int = 4) -> int:
+                  implicit: Any = None, bm=None, dtype_bytes: int = 4,
+                  operand_bytes: Any = None) -> int:
         """Analytic HBM bytes one forward moves through the conv layers
         (``sparse.conv_plan.conv_hbm_bytes`` summed over the network) —
         patch-matrix traffic for the materializing path, activation-slab
         streaming for the implicit one. ``implicit=None`` → the exec's
-        own path."""
+        own path. ``operand_bytes=None`` → the exec's own operand width:
+        1 byte for a quantized (int8-code) exec, ``dtype_bytes`` for the
+        f32 one; the output write is always priced at ``dtype_bytes``."""
         from ..sparse.conv_plan import conv_hbm_bytes
         use_implicit = self.implicit if implicit is None else implicit
+        if operand_bytes is None:
+            operand_bytes = 1 if self.quantized else dtype_bytes
         total = 0
         for path, stride, feat in conv_layer_order(cfg):
             total += conv_hbm_bytes(
                 self.layouts[path], self.group_masks_np[path], batch, feat,
                 feat, stride, "SAME", implicit=use_implicit,
-                bm=self.bm if bm is None else bm, dtype_bytes=dtype_bytes)
+                bm=self.bm if bm is None else bm, dtype_bytes=dtype_bytes,
+                operand_bytes=operand_bytes)
         return total
 
     def schedule_step_counts(self):
@@ -323,9 +332,11 @@ def _bind_conv_layers(tree: PyTree, specs: PyTree, group_masks: PyTree,
                       n_cu: int, packed: bool, weight_of, bind_one):
     """Shared bind loop of the two exec builders: walk the conv weights of
     ``tree``, derive each layer's (spec, group mask, layout, plan), and let
-    ``bind_one(keys, leaf, layout, gm, plan)`` produce the table entry.
+    ``bind_one(keys, w, layout, gm, plan, leaf)`` produce the table entry.
     ``weight_of(leaf)`` is the weight the mask derivation should score
-    (e.g. the Q2.5-quantized view)."""
+    (e.g. the Q2.5-quantized view); ``leaf`` is the raw array for binders
+    that quantize themselves (a calibrated QuantSpec must see unclipped
+    values — pre-quantizing onto the static grid would double-quantize)."""
     from ..sparse.conv_plan import conv_gemm_layout
 
     if specs is None:
@@ -352,7 +363,7 @@ def _bind_conv_layers(tree: PyTree, specs: PyTree, group_masks: PyTree,
         plan = layout.plan(gm)
         plans[keys], layouts[keys], gms[keys] = plan, layout, gm
         bound[keys] = leaf
-        table[keys] = bind_one(keys, w, layout, gm, plan)
+        table[keys] = bind_one(keys, w, layout, gm, plan, leaf)
     return table, plans, layouts, gms, bound
 
 
@@ -377,10 +388,12 @@ def build_sparse_execution(
     bm: Any = "auto",
     packed: bool = False,
     quantized: bool = False,
+    quant_spec: Any = None,
     implicit: Optional[bool] = None,
 ) -> SparseConvExec:
     """Bind every conv layer to the Pallas block-sparse kernel, prepacking
-    the masked (optionally Q2.5-quantized) weight once at bind time.
+    the masked weight once at bind time — as f32, or as **int8 codes**
+    with ``quantized=True`` (native Q2.5 × Q3.4 fixed-point execution).
 
     ``specs``: GroupSpec tree (default: ``conv_group_specs(params, n_cu)``).
     ``group_masks``: (num_groups,) {0,1} per conv leaf (e.g.
@@ -391,8 +404,18 @@ def build_sparse_execution(
     ``packed``: use the multi-group MXU-shaped tile layout
     (``conv_gemm_layout(spec, packed=True)``) instead of one tile per
     (g, f_block) group — far fewer grid steps at the same pruning.
-    ``quantized``: prepack ``Q.quantize(w, Q2_5)`` so the exec matches a
-    ``cfg.quantized`` dense forward.
+    ``quantized``: *native fixed-point execution*. Every bound layer
+    prepacks **int8 Q2.5 weight codes** (pruned groups stay zero codes)
+    plus the per-cout dequant scale row, quantizes its input activation
+    to int8 Q3.4 codes per call, and runs the Pallas kernels (implicit
+    and materializing alike) with int8 operands and **int32
+    accumulation**, dequantizing in the fused flush epilogue — no f32
+    fake-quant fallback on the bound path. Because the integer
+    arithmetic is exact (and the f32 QAT reference accumulates sub-2^24
+    code multiples, also exact), the exec matches a ``cfg.quantized``
+    dense forward bit-for-bit. ``quant_spec`` overrides the static
+    formats with a custom :class:`repro.core.quant.QuantSpec` (e.g.
+    per-layer calibrated activation scales).
     ``implicit``: bind the implicit-im2col kernel (``None`` = auto — on
     whenever the layout's K axis is channel-major, i.e. both FPGA
     layouts) so the im2col patch matrix is never materialized in HBM;
@@ -407,10 +430,20 @@ def build_sparse_execution(
     """
     from ..sparse.conv_plan import make_sparse_conv
 
-    def bind_one(keys, w, layout, gm, plan):
+    if quant_spec is not None and not quantized:
+        raise ValueError("quant_spec without quantized=True would be "
+                         "silently ignored — pass quantized=True")
+    qspec = (quant_spec or Q.QuantSpec()) if quantized else None
+
+    def bind_one(keys, w, layout, gm, plan, leaf):
+        # quantized: bind the RAW weight — the quant spec emits the codes
+        # itself, and a calibrated spec must not see values pre-clipped to
+        # the static Q2.5 grid (for the static spec the two are identical:
+        # round(fake_quant(w)·2^5) == round(w·2^5))
         return (None if plan.density >= dense_fallback
-                else make_sparse_conv(layout, gm, bm=bm, weight=w,
-                                      implicit=implicit))
+                else make_sparse_conv(layout, gm, bm=bm,
+                                      weight=leaf if quantized else w,
+                                      implicit=implicit, quant=qspec))
 
     table, plans, layouts, gms, bound = _bind_conv_layers(
         params, specs, group_masks, n_cu, packed,
@@ -433,6 +466,7 @@ def build_sparse_inference(
     dense_fallback: float = 0.999,
     bm: Any = "auto",
     packed: bool = True,
+    quantized: bool = False,
     implicit: Optional[bool] = True,
 ) -> SparseConvExec:
     """Bind BN-folded conv layers (``fold_batchnorm`` output: per-conv
@@ -444,27 +478,37 @@ def build_sparse_inference(
     packed (MXU-shaped) layout with the **implicit-im2col** kernel
     (``implicit=True``: windows gathered from the NHWC activation
     in-kernel, no patch matrix in HBM, adaptive ``bm="auto"`` M-blocking;
-    ``implicit=False`` keeps the materializing oracle). Consume with
-    :func:`apply_folded`.
+    ``implicit=False`` keeps the materializing oracle).
+
+    ``quantized=True``: fixed-point folded inference — BN folding scales
+    each output channel arbitrarily, so the static Q2.5 grid would clip;
+    each layer instead gets **per-cout calibrated** weight scales
+    (``QuantSpec.calibrate``: the channel's absmax maps to ±127) with
+    static Q3.4 activation codes, and the kernel flush runs the full
+    dequant → bias → ReLU epilogue on the int32 accumulator. Accurate to
+    activation-quantization tolerance vs the float folded path (weights
+    carry ~7 bits/channel). Consume with :func:`apply_folded`.
     """
     from ..sparse.conv_plan import make_sparse_conv
 
     conv_params = {k: v for k, v in folded.items() if k != "fc"}
 
-    def bind_one(keys, w, layout, gm, plan):
+    def bind_one(keys, w, layout, gm, plan, leaf):
         if plan.density >= dense_fallback:
             return None
         bias = _get_path(folded, keys[:-1])["b"]
         relu = keys[-2] in ("conv0", "conv1")   # ReLU directly after BN
+        quant = Q.QuantSpec.calibrate(w) if quantized else None
         return make_sparse_conv(layout, gm, bm=bm, weight=w, bias=bias,
-                                relu=relu, implicit=implicit)
+                                relu=relu, implicit=implicit, quant=quant)
 
     table, plans, layouts, gms, bound = _bind_conv_layers(
         conv_params, specs, group_masks, n_cu, packed, lambda l: l, bind_one)
     exec_implicit = _resolve_exec_implicit(implicit, layouts)
     return SparseConvExec(table=table, plans=plans, n_cu=n_cu,
                           layouts=layouts, group_masks_np=gms, folded=True,
-                          bound_weights=bound, implicit=exec_implicit, bm=bm)
+                          quantized=quantized, bound_weights=bound,
+                          implicit=exec_implicit, bm=bm)
 
 
 # sparse=True builds are memoized on params identity: the cache holds a

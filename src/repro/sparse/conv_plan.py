@@ -383,7 +383,8 @@ def conv_m_blocks(ho: int, wo: int, batch: int, *, bm="auto",
 
 def conv_hbm_bytes(layout: ConvGemmLayout, group_mask, batch: int, h: int,
                    w: int, stride: int = 1, padding: str = "SAME", *,
-                   implicit: bool, bm="auto", dtype_bytes: int = 4) -> int:
+                   implicit: bool, bm="auto", dtype_bytes: int = 4,
+                   operand_bytes: Optional[int] = None) -> int:
     """Analytic HBM bytes one forward of this conv layer moves — the
     data-movement contract the implicit kernel changes.
 
@@ -396,10 +397,18 @@ def conv_hbm_bytes(layout: ConvGemmLayout, group_mask, batch: int, h: int,
     Implicit: stream one ``(Hp, Wp, cpk)`` activation slab + one weight
     tile per live grid step and write the output — the patch matrix
     never exists.
+
+    ``operand_bytes`` prices the *operand* traffic (activations /
+    patches / weights) separately from the f32 output write
+    (``dtype_bytes``): pass ``1`` for the int8 Q2.5×Q3.4 execution —
+    every per-step slab, patch tile and weight tile shrinks 4×, which is
+    where quantized execution banks its bandwidth win. Default ``None``
+    = same as ``dtype_bytes`` (the f32 contract).
     """
     from ..kernels.conv_lowering import conv_out_size
     from ..kernels.implicit_conv import choose_m_block, same_pads
 
+    ob = dtype_bytes if operand_bytes is None else operand_bytes
     geo = layout.implicit_geometry()
     kx, ky, cin, cout = layout.spec.shape
     ho, wo = conv_out_size(h, kx, stride, padding), conv_out_size(w, ky, stride, padding)
@@ -409,7 +418,7 @@ def conv_hbm_bytes(layout: ConvGemmLayout, group_mask, batch: int, h: int,
     mb, bm_eff = conv_m_blocks(ho, wo, batch, bm=bm,
                                implicit=implicit and geo is not None)
     steps = mb * live
-    w_bytes = steps * bk * bn * dtype_bytes
+    w_bytes = steps * bk * bn * ob
     out_bytes = mb * bm_eff * layout.n_packed * dtype_bytes
     if implicit and geo is not None and choose_m_block(
             ho, wo, cap=128 if bm == "auto" else int(bm)) is not None:
@@ -418,11 +427,11 @@ def conv_hbm_bytes(layout: ConvGemmLayout, group_mask, batch: int, h: int,
         else:
             pt = pb = pw0 = pw1 = 0
         hp, wp = h + pt + pb, w + pw0 + pw1
-        slab = hp * wp * geo["cpk"] * dtype_bytes
+        slab = hp * wp * geo["cpk"] * ob
         return steps * slab + w_bytes + out_bytes
-    x_bytes = batch * h * w * cin * dtype_bytes
-    patches = mb * bm_eff * layout.k_packed * dtype_bytes      # write once
-    patch_reads = steps * bm_eff * bk * dtype_bytes            # kernel DMA
+    x_bytes = batch * h * w * cin * ob
+    patches = mb * bm_eff * layout.k_packed * ob               # write once
+    patch_reads = steps * bm_eff * bk * ob                     # kernel DMA
     return x_bytes + patches + patch_reads + w_bytes + out_bytes
 
 
@@ -430,7 +439,8 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
                      weight: Optional[jnp.ndarray] = None,
                      bias: Optional[jnp.ndarray] = None,
                      relu: bool = False,
-                     implicit: Optional[bool] = None):
+                     implicit: Optional[bool] = None,
+                     quant=None):
     """Bind a Pallas block-sparse kernel to one conv layer's plan.
 
     Returns ``conv(x, w=None, stride=1, padding="SAME") -> (B, Ho, Wo, cout)``
@@ -463,8 +473,20 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
     + packs ``w`` on every call (test / legacy path).
     ``bias`` / ``relu``: fused kernel epilogue (per-cout bias add and ReLU
     at the accumulator flush — folded-BN inference entirely in-kernel).
-    The epilogue path is forward-only. ``conv.plan`` / ``conv.layout`` /
-    ``conv.group_mask`` / ``conv.implicit`` expose the dispatch accounting.
+    The epilogue path is forward-only.
+
+    ``quant`` (a :class:`repro.core.quant.QuantSpec`): quantization as a
+    property of the execution plan. The masked weight is emitted as
+    **int8 codes** at pack time (pruned groups stay exactly zero codes),
+    the per-cout dequant scale row is packed onto the same N lanes as the
+    bias, the closure quantizes each call's activation to int8 codes
+    (static Q3.4 or the spec's calibrated scale), and *both* kernels run
+    int8-operand / int32-accumulate passes with the dequant → bias → ReLU
+    epilogue fused at the flush. Output is f32. Forward-only (QAT trains
+    through the fake-quant dense path and rebinds).
+
+    ``conv.plan`` / ``conv.layout`` / ``conv.group_mask`` /
+    ``conv.implicit`` / ``conv.quant`` expose the dispatch accounting.
     """
     from ..kernels import ops
     from ..kernels import implicit_conv as IC
@@ -483,13 +505,18 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
     bm_cap = 128 if adaptive else int(bm)
     packed_bias = (None if bias is None
                    else layout.pack_bias(jnp.asarray(bias, jnp.float32)))
+    # the dequant row is a bind-time constant: it depends on the quant
+    # spec's (static or calibrated) scales, never on a per-call weight
+    packed_scale = (None if quant is None else layout.pack_bias(
+        jnp.asarray(quant.dequant_row(layout.spec.shape[-1]), jnp.float32)))
     idx_dev, cnt_dev = jnp.asarray(plan.idx), jnp.asarray(plan.cnt)
     mms: dict = {}        # materializing kernels, keyed by effective bm
 
     def _materializing(bm_eff):
         if bm_eff not in mms:
             mms[bm_eff] = ops.make_block_sparse_matmul(
-                plan, tm, bm=bm_eff, bias=packed_bias, relu=relu)
+                plan, tm, bm=bm_eff, bias=packed_bias, relu=relu,
+                scale=packed_scale)
         return mms[bm_eff]
 
     gm_dev = jnp.asarray(gm, jnp.float32)
@@ -499,8 +526,16 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
         w2 = w.reshape(spec.shape) if w.shape != spec.shape else w
         return apply_group_mask(spec, w2, gm_dev.astype(w.dtype)).reshape(w.shape)
 
+    def _pack_w(w):
+        wm = _masked(w)
+        if quant is None:
+            return layout.pack_weight(wm)
+        # int8 codes packed onto the tile grid: zero-masked groups emit
+        # zero codes, padding stays zero codes — the GEMM is exact
+        return layout.pack_weight(quant.weight_codes(wm))
+
     if weight is not None:
-        w_packed = layout.pack_weight(_masked(weight))
+        w_packed = _pack_w(weight)
         bound_hw = weight.shape[:2]
     else:
         w_packed, bound_hw = None, None
@@ -512,7 +547,9 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
                                  "rebuild with make_sparse_conv(..., weight=w)")
             (kx, ky), wp = bound_hw, w_packed
         else:
-            (kx, ky), wp = w.shape[:2], layout.pack_weight(_masked(w))
+            (kx, ky), wp = w.shape[:2], _pack_w(w)
+        if quant is not None:
+            x = quant.act_codes(x)          # int8 Q3.4 (or calibrated) codes
         B, H, W, C = x.shape
         ho = conv_out_size(H, kx, stride, padding)
         wo = conv_out_size(W, ky, stride, padding)
@@ -527,7 +564,7 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
                 slab = xp.shape[1] * xp.shape[2] * cpk * x.dtype.itemsize
                 if slab <= IC.SLAB_VMEM_BUDGET:
                     out2d = IC.implicit_block_sparse_conv(
-                        xp, wp, idx_dev, cnt_dev, packed_bias,
+                        xp, wp, idx_dev, cnt_dev, packed_bias, packed_scale,
                         kx=kx, ky=ky, stride=stride, block_oh=block_oh,
                         bpi=bpi, wo=wo, block=layout.block, bm=bm_eff,
                         cpk=cpk, slot=slot, relu=relu,
@@ -547,4 +584,5 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
     conv.prebound = weight is not None
     conv.implicit = use_implicit
     conv.bm = bm
+    conv.quant = quant
     return conv

@@ -118,6 +118,47 @@ def test_int8_matmul_bit_exact(M, K, N):
     assert bool(jnp.all(out == expect))      # integer arithmetic: exact
 
 
+def test_int8_matmul_percout_scale_row():
+    """The (N,) per-cout dequant row: bit-exact vs the reference with a
+    different scale per output column, and the legacy scalar (1,) signature
+    is the broadcast special case."""
+    rng = np.random.RandomState(9)
+    M, K, N = 128, 256, 256
+    xc = jnp.asarray(rng.randint(-127, 128, (M, K)), jnp.int8)
+    wc = jnp.asarray(rng.randint(-127, 128, (K, N)), jnp.int8)
+    row = jnp.asarray(rng.uniform(1e-3, 1e-1, N).astype(np.float32))
+    from repro.kernels.int8_matmul import int8_matmul
+    out = int8_matmul(xc, wc, row, interpret=True)
+    expect = ref.int8_matmul_ref(xc, wc, row)
+    assert bool(jnp.all(out == expect))      # integer acc, one f32 multiply
+    # scalar thin wrapper == the constant row
+    s = jnp.asarray([1.0 / 512], jnp.float32)
+    out_scalar = int8_matmul(xc, wc, s, interpret=True)
+    out_row = int8_matmul(xc, wc, jnp.full((N,), 1.0 / 512, jnp.float32),
+                          interpret=True)
+    assert bool(jnp.all(out_scalar == out_row))
+    assert bool(jnp.all(out_scalar == ref.int8_matmul_ref(xc, wc, 1.0 / 512)))
+
+
+def test_block_sparse_int8_codes_bit_exact():
+    """int8 operands through the block-sparse kernel: int32 accumulation +
+    per-cout dequant flush is bit-identical to the integer reference; dead
+    tiles (zero codes) are skipped without changing the result."""
+    rng = np.random.RandomState(21)
+    M, K, N = 128, 256, 256
+    tm = np.asarray([[True, False], [True, True]])
+    xc = jnp.asarray(rng.randint(-127, 128, (M, K)), jnp.int8)
+    wc = np.asarray(rng.randint(-127, 128, (K, N)), np.int8)
+    wc[:128, 128:] = 0                       # the dead tile is zero codes
+    wc = jnp.asarray(wc)
+    row = jnp.full((N,), 1.0 / 512, jnp.float32)   # power-of-two: exact
+    plan = plan_from_tile_mask(tm, (128, 128))
+    f = ops.make_block_sparse_matmul(plan, tm, scale=np.asarray(row))
+    out = f(xc, wc)
+    assert out.dtype == jnp.float32
+    assert bool(jnp.all(out == ref.int8_matmul_ref(xc, wc, row)))
+
+
 def test_block_sparse_from_hapm_endtoend():
     """HAPM element mask -> plan -> kernel == masked dense matmul."""
     rng = np.random.RandomState(5)

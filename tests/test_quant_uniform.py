@@ -4,16 +4,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (Q2_5, Q3_4, QFormat, UniformPruneConfig, fake_quant,
-                        from_int, magnitude_masks, quantize, sparsity_at,
-                        to_int)
+from repro.core import (Q2_5, Q3_4, QFormat, QuantSpec, UniformPruneConfig,
+                        fake_quant, from_int, magnitude_masks, quantize,
+                        sparsity_at, to_int, to_int8)
 
 
 def test_qformat_ranges():
     assert Q2_5.bits == 8 and Q3_4.bits == 8
+    assert Q2_5.max_code == 127 and Q2_5.min_code == -127
     assert Q2_5.max_val == 4.0 - 1 / 32
-    assert Q2_5.min_val == -4.0
+    # symmetric saturation: ±(2^7 - 1) codes, the DSP48E1 contract — the
+    # negative edge saturates at -max_val, not -2^int_bits
+    assert Q2_5.min_val == -(4.0 - 1 / 32)
     assert Q3_4.max_val == 8.0 - 1 / 16
+    assert Q3_4.min_val == -(8.0 - 1 / 16)
 
 
 def test_quantize_grid_and_clip():
@@ -39,6 +43,76 @@ def test_int_roundtrip():
     assert codes.dtype == jnp.int32
     np.testing.assert_allclose(np.asarray(from_int(codes, Q2_5)),
                                np.asarray(quantize(x, Q2_5)), atol=1e-7)
+
+
+@pytest.mark.parametrize("fmt", [Q2_5, Q3_4], ids=["Q2.5", "Q3.4"])
+def test_fake_quant_code_emission_equivalence_exhaustive(fmt):
+    """The two views of the arithmetic agree over the whole int8 domain:
+    every code round-trips, fake-quant is exactly ``from_int(to_int(x))``
+    for a dense float sweep (grid points, half-steps, saturating values),
+    rounding is half-to-even, saturation symmetric at ±(2^7 - 1)."""
+    # 1) exhaustive over codes: from_int -> to_int/to_int8 round-trips,
+    #    fake-quant is the identity on the representable grid
+    codes = np.arange(fmt.min_code, fmt.max_code + 1, dtype=np.int32)
+    grid = np.asarray(from_int(jnp.asarray(codes), fmt))
+    np.testing.assert_array_equal(np.asarray(to_int(jnp.asarray(grid), fmt)), codes)
+    np.testing.assert_array_equal(np.asarray(to_int8(jnp.asarray(grid), fmt)),
+                                  codes.astype(np.int8))
+    np.testing.assert_array_equal(np.asarray(quantize(jnp.asarray(grid), fmt)), grid)
+    # 2) dense float sweep: every half-step boundary and off-grid point in
+    #    [min-2, max+2] — code emission * LSB == fake-quant, bitwise
+    xs = np.concatenate([
+        (codes + 0.5) / fmt.scale,           # exact ties -> round half to even
+        (codes + 0.49) / fmt.scale, (codes - 0.51) / fmt.scale,
+        np.linspace(fmt.min_val - 2, fmt.max_val + 2, 4097),
+    ]).astype(np.float32)
+    fq = np.asarray(quantize(jnp.asarray(xs), fmt))
+    emitted = np.asarray(to_int(jnp.asarray(xs), fmt))
+    np.testing.assert_array_equal(fq, emitted.astype(np.float32) / fmt.scale)
+    assert emitted.min() >= fmt.min_code and emitted.max() <= fmt.max_code
+    # 3) round half to even on an exact tie (codes are integers: ties at
+    #    odd multiples of LSB/2 go to the even code)
+    tie = np.asarray(to_int(jnp.asarray([0.5 / fmt.scale, 1.5 / fmt.scale,
+                                         -0.5 / fmt.scale]), fmt))
+    np.testing.assert_array_equal(tie, [0, 2, 0])
+    # 4) saturation: beyond-range inputs clamp to ±max_code exactly
+    np.testing.assert_array_equal(
+        np.asarray(to_int(jnp.asarray([1e9, -1e9]), fmt)),
+        [fmt.max_code, -fmt.max_code])
+
+
+def test_quant_spec_static_and_calibrated():
+    """QuantSpec: the execution-plan view — codes × dequant row reproduce
+    the fake-quant values; calibrated per-cout scales cover weights the
+    static Q2.5 grid would clip."""
+    rng = np.random.RandomState(0)
+    spec = QuantSpec()
+    w = jnp.asarray(rng.randn(3, 3, 4, 6).astype(np.float32))
+    codes = spec.weight_codes(w)
+    assert codes.dtype == jnp.int8
+    # static: codes/2^5 == fake-quant(Q2.5), exactly
+    np.testing.assert_array_equal(
+        np.asarray(codes, np.float32) / 32.0, np.asarray(quantize(w, Q2_5)))
+    # dequant contract: code * w_scale^-1 * a_scale^-1 accumulates to float
+    row = np.asarray(spec.dequant_row(6))
+    np.testing.assert_allclose(row, 1.0 / (32.0 * 16.0))
+    x = jnp.asarray(rng.uniform(-9, 9, (5,)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(spec.act_codes(x), np.float32) / 16.0,
+        np.asarray(quantize(x, Q3_4)))
+    # zero weights stay exactly zero codes (masked pruned groups)
+    assert int(jnp.abs(spec.weight_codes(jnp.zeros((3, 3, 4, 6)))).max()) == 0
+
+    # calibrated: a channel scaled far past the Q2.5 range keeps ~7 bits
+    wbig = w * jnp.asarray([1.0, 100.0, 0.01, 1.0, 1.0, 1.0])
+    cal = QuantSpec.calibrate(wbig)
+    ccodes = cal.weight_codes(wbig)
+    deq = np.asarray(ccodes, np.float32) * np.asarray(cal.dequant_row(6)) * 16.0
+    err = np.abs(deq - np.asarray(wbig))
+    # per-channel error bounded by half an LSB of that channel's scale
+    absmax = np.abs(np.asarray(wbig)).reshape(-1, 6).max(0)
+    assert (err.reshape(-1, 6).max(0) <= 0.5 * absmax / 127 + 1e-7).all()
+    assert int(np.abs(np.asarray(ccodes)).max()) == 127   # scales saturate absmax
 
 
 def test_ste_gradient():
