@@ -1,0 +1,213 @@
+"""Serving benchmark: the persistent exec cache + bucketed batching
+driver (:mod:`repro.launch.serve_cnn`) against cold per-request binds.
+
+What a serving process pays per request without the cache is the whole
+bind pipeline: host-side plan construction over every conv layer, bind-
+time weight prepacking, jit tracing + Pallas lowering, then the forward.
+With the cache, steady state pays the forward alone — everything else is
+keyed on ``(arch, sparsity fingerprint, ExecSpec, bucket)`` and reused.
+This bench measures both sides and the machinery between them:
+
+- ``cold_bind_p50_ms`` — fresh ``bind_execution`` + fresh jit + forward,
+  per single-image request (the no-cache serving cost);
+- per-bucket steady-state p50/p99 latency and images/sec after
+  ``CnnServer.warmup()`` (every request a cache hit — asserted 1.0);
+- ``bind_amortization_ratio`` — cold p50 / steady p50 at batch 1, gated
+  >= 5x here and in ``benchmarks.check_sparse_regression``;
+- bit-identical outputs vs a fresh bind at every bucket AND through the
+  chunk/pad/slice path for an off-bucket batch (asserted exact — padding
+  is free because eval-mode inference is per-image independent);
+- mask-change handling: a deeper HAPM prune invalidates exactly the
+  stale entries, one rebind re-populates, steady state returns to hits;
+- the bucket batcher under a bursty arrival trace (virtual clock, no
+  sleeps) with the measured per-bucket service times;
+- per-image HBM accounting from ``SparseConvExec.report`` (implicit vs
+  materializing contract, f32 vs int8 operands).
+
+Emits ``BENCH_serving_cnn.json`` at the repo root (CI artifact; the
+regression checker gates hit-rate and amortization).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (HAPMConfig, apply_masks, hapm_element_masks,
+                        hapm_epoch_update, hapm_init)
+from repro.launch.exec_cache import BucketBatcher
+from repro.launch.serve_cnn import CnnServer, simulate_trace
+from repro.models import cnn
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(ROOT, "BENCH_serving_cnn.json")
+
+
+def _pruned_model(cfg, n_cu, sparsity, seed=0):
+    params, state = cnn.init(jax.random.PRNGKey(seed), cfg)
+    specs = cnn.conv_group_specs(params, n_cu)
+    hcfg = HAPMConfig(sparsity, 1)
+    st = hapm_epoch_update(hapm_init(specs, hcfg), specs, params, hcfg)
+    return apply_masks(params, hapm_element_masks(specs, st)), state, specs
+
+
+def run(args=None) -> dict:
+    fast = bool(getattr(args, "fast", False) or getattr(args, "smoke", False))
+    print("=" * 72)
+    print("CNN serving: persistent exec cache + bucketed batching")
+    print("=" * 72)
+    if fast:
+        cfg = cnn.ResNetConfig(stages=(1, 1), widths=(8, 16), image_size=16)
+        n_cu, buckets, reps, cold_reps = 4, (1, 4, 8), 6, 2
+    else:
+        cfg = cnn.ResNetConfig(stages=(1, 1, 2), widths=(16, 32, 64),
+                               image_size=16)
+        n_cu, buckets, reps, cold_reps = 12, (1, 8, 32), 8, 3
+    pruned, state, specs = _pruned_model(cfg, n_cu, sparsity=0.5)
+    spec = cnn.ExecSpec(n_cu=n_cu)          # production: packed/implicit/auto
+    h = cfg.image_size
+    rng = np.random.RandomState(0)
+
+    # -- cold path: what every request costs without the cache ----------
+    x1 = rng.rand(1, h, h, 3).astype(np.float32)
+    cold = []
+    for _ in range(cold_reps):
+        t0 = time.time()
+        ex = cnn.bind_execution(pruned, cfg, spec=spec)
+        fn = jax.jit(lambda xx, ee=ex: cnn.apply(pruned, state, xx, cfg,
+                                                 train=False, sparse=ee)[0])
+        np.asarray(fn(x1))
+        cold.append(time.time() - t0)
+    cold_p50 = float(np.percentile(cold, 50))
+    print(f"[cold] bind+jit+forward per request: {cold_p50 * 1e3:.1f} ms")
+
+    # -- steady state through the cache ---------------------------------
+    server = CnnServer(pruned, state, cfg, spec=spec, buckets=buckets)
+    t0 = time.time()
+    server.warmup()
+    warmup_s = time.time() - t0
+    binds_after_warmup = server.cache.binds
+    assert binds_after_warmup == 1, "one bind must serve every bucket"
+    server.cache.hits = server.cache.misses = 0    # steady-state window
+
+    bucket_rows, steady_xs = [], {}
+    for b in buckets:
+        lats = []
+        xb = rng.rand(b, h, h, 3).astype(np.float32)
+        steady_xs[b] = xb
+        for _ in range(reps):
+            t0 = time.time()
+            np.asarray(server.infer(xb))
+            lats.append(time.time() - t0)
+        lat = np.asarray(lats)
+        bucket_rows.append({
+            "bucket": b,
+            "p50_ms": float(np.percentile(lat, 50)) * 1e3,
+            "p99_ms": float(np.percentile(lat, 99)) * 1e3,
+            "images_per_sec": b / float(np.percentile(lat, 50)),
+        })
+        print(f"[steady] bucket {b:>3}: p50 {bucket_rows[-1]['p50_ms']:.2f} ms"
+              f"  p99 {bucket_rows[-1]['p99_ms']:.2f} ms"
+              f"  {bucket_rows[-1]['images_per_sec']:.0f} img/s")
+    steady_hit_rate = server.cache.hit_rate
+    assert steady_hit_rate == 1.0, server.cache.stats()
+    steady_p50_b1 = bucket_rows[0]["p50_ms"] / 1e3
+    amortization = cold_p50 / steady_p50_b1
+    print(f"[amortize] cold {cold_p50 * 1e3:.1f} ms vs steady "
+          f"{steady_p50_b1 * 1e3:.2f} ms -> {amortization:.0f}x")
+    assert amortization >= 5.0, (cold_p50, steady_p50_b1)
+
+    # -- exactness: cache output == fresh bind, at every bucket ---------
+    for b in buckets:
+        ex = cnn.bind_execution(pruned, cfg, spec=spec)
+        ref = jax.jit(lambda xx, ee=ex: cnn.apply(
+            pruned, state, xx, cfg, train=False, sparse=ee)[0])(steady_xs[b])
+        got = server.infer(steady_xs[b])
+        assert bool((np.asarray(got) == np.asarray(ref)).all()), b
+    # off-bucket batch: pad-to-bucket + slice must equal a fresh bind run
+    # at the same padded shape (exact — per-image independence means the
+    # padding rows cannot touch the live rows)
+    odd = buckets[-2] + 1                    # lands strictly inside a bucket
+    bkt = next(b for b in buckets if b >= odd)
+    x_odd = rng.rand(odd, h, h, 3).astype(np.float32)
+    x_pad = np.concatenate(
+        [x_odd, np.zeros((bkt - odd, h, h, 3), np.float32)])
+    ex = cnn.bind_execution(pruned, cfg, spec=spec)
+    ref = jax.jit(lambda xx, ee=ex: cnn.apply(
+        pruned, state, xx, cfg, train=False, sparse=ee)[0])(x_pad)[:odd]
+    got = server.infer(x_odd)
+    assert bool((np.asarray(got) == np.asarray(ref)).all()), odd
+    print(f"[exact] bit-identical at buckets {list(buckets)} and batch "
+          f"{odd} (padded to {bkt})")
+
+    # -- mask change: invalidate exactly the stale binds, then re-steady
+    pruned75, _, _ = _pruned_model(cfg, n_cu, sparsity=0.75)
+    old_fp = server.mask_fp
+    invalidated = server.update_masks(pruned75)
+    assert server.mask_fp != old_fp
+    assert invalidated == len(buckets), invalidated
+    h0, m0, b0 = server.cache.hits, server.cache.misses, server.cache.binds
+    np.asarray(server.infer(x1))             # miss -> one rebind
+    assert (server.cache.misses, server.cache.binds) == (m0 + 1, b0 + 1)
+    np.asarray(server.infer(x1))             # steady again
+    assert server.cache.hits == h0 + 1
+    mask_change = {"invalidated": invalidated, "rebinds": 1,
+                   "old_fp": old_fp[:12], "new_fp": server.mask_fp[:12]}
+    print(f"[masks] 0.5 -> 0.75 prune: {invalidated} entries invalidated, "
+          f"1 rebind, steady state restored")
+
+    # -- batcher under a bursty arrival trace (virtual clock) -----------
+    svc = {r["bucket"]: r["p50_ms"] / 1e3 for r in bucket_rows}
+    mean_gap = svc[buckets[0]] / 4           # arrivals faster than service
+    trace = [(float(t), 1) for t in
+             np.cumsum(rng.exponential(mean_gap, 64))]
+    batcher = BucketBatcher(buckets, max_wait_s=4 * mean_gap)
+    batch_sim = simulate_trace(batcher, trace, lambda b: svc[b])
+    print(f"[batcher] {batch_sim}")
+
+    # -- per-image data movement of the served bind ---------------------
+    rep = server.report(batch=1)
+    hbm = {k: rep[k] for k in
+           ("hbm_bytes", "hbm_bytes_implicit", "hbm_bytes_materialized",
+            "hbm_bytes_implicit_int8", "hbm_bytes_materialized_int8",
+            "hbm_bytes_ratio", "grid_step_ratio", "schedule_step_ratio")}
+
+    out = {
+        "config": {"n_cu": n_cu, "buckets": list(buckets), "fast": fast,
+                   "stages": cfg.stages, "widths": cfg.widths,
+                   "image_size": cfg.image_size, "sparsity": 0.5,
+                   "spec": {f.name: getattr(spec, f.name)
+                            for f in dataclasses.fields(spec)}},
+        "cold_bind_p50_ms": cold_p50 * 1e3,
+        "warmup_s": warmup_s,
+        "binds_after_warmup": binds_after_warmup,
+        "buckets": bucket_rows,
+        "steady_hit_rate": steady_hit_rate,
+        "bind_amortization_ratio": amortization,
+        "bit_identical": True,
+        "mask_change": mask_change,
+        "batcher": batch_sim,
+        "hbm_per_image": hbm,
+        "cache": server.cache.stats(),
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\nwrote {OUT_JSON}")
+    return out
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description="CNN serving bench")
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=False)
+    args = ap.parse_args(argv)
+    run(args)
+
+
+if __name__ == "__main__":
+    main()

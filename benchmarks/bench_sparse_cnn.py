@@ -74,13 +74,18 @@ OUT_JSON = os.path.join(ROOT, "BENCH_sparse_cnn.json")
 SWEEP = (0.0, 0.25, 0.5, 0.75)
 
 
-def _timed(fn, *a, reps=3):
+def _timed(fn, *a, reps=5):
+    # min over blocking reps, not a pipelined mean: a single scheduler
+    # spike inflates a mean and flips the near-threshold speedup asserts,
+    # while the min estimates the uncontended cost
     fn(*a)[0].block_until_ready()            # warmup / compile
-    t0 = time.time()
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.time()
         out = fn(*a)
-    out[0].block_until_ready()
-    return out, (time.time() - t0) / reps
+        out[0].block_until_ready()
+        best = min(best, time.time() - t0)
+    return out, best
 
 
 def run(args=None) -> dict:
@@ -118,27 +123,26 @@ def run(args=None) -> dict:
             st = hapm_epoch_update(st, specs, params, hcfg)
         pruned = apply_masks(params, hapm_element_masks(specs, st))
 
-        # one build per execution contract per sparsity level, reused for
-        # step accounting AND timing (weights prepacked at bind time)
-        common = dict(n_cu=n_cu, specs=specs, group_masks=st.group_masks)
+        # one bind per execution contract per sparsity level, reused for
+        # step accounting AND timing (weights prepacked at bind time) —
+        # all through the unified entry point, one ExecSpec per contract
+        bind = lambda **kw: cnn.bind_execution(
+            pruned, cfg, spec=cnn.ExecSpec(n_cu=n_cu, **kw),
+            specs=specs, group_masks=st.group_masks)
         execs = {
             # production: packed layout, implicit kernel, adaptive bm
-            "implicit": cnn.build_sparse_execution(
-                pruned, packed=True, implicit=True, **common),
+            "implicit": bind(packed=True, implicit=True),
             # PR-3 contract: packed layout, HBM patch matrix, fixed bm
-            "materializing": cnn.build_sparse_execution(
-                pruned, packed=True, implicit=False, bm=128, **common),
+            "materializing": bind(packed=True, implicit=False, bm=128),
             # PR-2 contract: one group per tile
-            "pergroup": cnn.build_sparse_execution(
-                pruned, packed=False, implicit=False, bm=128, **common),
+            "pergroup": bind(packed=False, implicit=False, bm=128),
         }
         # kernel-only twins (no dense fallback): the isolated
         # implicit-vs-materializing data-movement comparison
         kernel_only = {
-            kind: cnn.build_sparse_execution(
-                pruned, packed=True, implicit=(kind == "implicit"),
-                bm="auto" if kind == "implicit" else 128,
-                dense_fallback=2.0, **common)
+            kind: bind(packed=True, implicit=(kind == "implicit"),
+                       bm="auto" if kind == "implicit" else 128,
+                       dense_fallback=2.0)
             for kind in ("implicit", "materializing")
         }
         # native Q2.5×Q3.4 int8 execution: same layouts/plans/schedule,
@@ -146,10 +150,9 @@ def run(args=None) -> dict:
         # dense_fallback=2.0 so every layer runs its int8 kernel — the bench
         # claim is about the executed fixed-point path, not the lax fallback
         q_execs = {
-            kind: cnn.build_sparse_execution(
-                pruned, packed=True, implicit=(kind == "implicit"),
-                bm="auto" if kind == "implicit" else 128,
-                quantized=True, dense_fallback=2.0, **common)
+            kind: bind(packed=True, implicit=(kind == "implicit"),
+                       bm="auto" if kind == "implicit" else 128,
+                       quantized=True, dense_fallback=2.0)
             for kind in ("implicit", "materializing")
         }
 
@@ -230,18 +233,25 @@ def run(args=None) -> dict:
             f"int8 execution diverged from QAT codes at {target}: {err_q_qat}"
         assert bool(jnp.all(q_outs["implicit"] == q_outs["materializing"]))
         err_q_f32 = float(jnp.max(jnp.abs(q_outs["implicit"] - ref)))
-        # int8 operand pricing: same plans, 1-byte slabs/patches/weights
-        q_hbm = q_execs["implicit"].hbm_bytes(cfg, batch=1)
-        q_hbm_mat = q_execs["materializing"].hbm_bytes(cfg, batch=1)
 
         rep = simulate(pruned, state, cfg, accel)
         assert (rep.schedule_steps_live, rep.schedule_steps_total) == \
             (live_groups, total_groups), "cycle-model step accounting drifted"
-        imp, mat = execs["implicit"], execs["materializing"]
-        util_b1 = imp.mac_utilization(cfg, batch=1)
-        util_b1_fixed = mat.mac_utilization(cfg, batch=1)
-        hbm_imp = imp.hbm_bytes(cfg, batch=1)       # per image, like steps
-        hbm_mat = mat.hbm_bytes(cfg, batch=1)
+        # every accounting field from the one report() artifact (the same
+        # dict the simulator and the serving driver consume); the implicit
+        # exec's canonical hbm_bytes_* contracts cover all four pricing
+        # corners, so the quantized/materializing execs need no re-query
+        imp_rep = execs["implicit"].report(cfg, batch=1)   # per image
+        imp_rep_b = execs["implicit"].report(cfg, batch=batch)
+        mat_rep = execs["materializing"].report(cfg, batch=1)
+        util_b1 = imp_rep["padded_mac_utilization"]
+        util_b1_fixed = mat_rep["padded_mac_utilization"]
+        hbm_imp = imp_rep["hbm_bytes_implicit"]
+        hbm_mat = imp_rep["hbm_bytes_materialized"]
+        # int8 operand pricing: same plans, 1-byte slabs/patches/weights
+        q_hbm = imp_rep["hbm_bytes_implicit_int8"]
+        q_hbm_mat = imp_rep["hbm_bytes_materialized_int8"]
+        assert q_hbm == q_execs["implicit"].hbm_bytes(cfg, batch=1)
         row = {
             "target_group_sparsity": target,
             # grid steps at the PR-3 fixed blocking (deterministic,
@@ -264,7 +274,7 @@ def run(args=None) -> dict:
             "hbm_bytes_moved_implicit": hbm_imp,
             "hbm_bytes_moved_materialized": hbm_mat,
             "hbm_bytes_ratio": hbm_imp / hbm_mat,
-            "bm_effective": imp.bm_effective(cfg, batch=1),
+            "bm_effective": imp_rep["bm_effective"],
             # native int8 execution: wall clock, byte cut, parity
             "wall_quantized_ms": walls["q_implicit"] * 1e3,
             "wall_quantized_materializing_ms": walls["q_materializing"] * 1e3,
@@ -274,7 +284,7 @@ def run(args=None) -> dict:
             "hbm_bytes_moved_quantized_materialized": q_hbm_mat,
             "quantized_hbm_ratio_vs_f32": q_hbm / hbm_imp,
             # M-padding-aware MAC utilization of the dispatched tiles
-            "padded_mac_utilization": imp.mac_utilization(cfg, batch=batch),
+            "padded_mac_utilization": imp_rep_b["padded_mac_utilization"],
             "padded_mac_utilization_b1": util_b1,
             "padded_mac_utilization_b1_fixed_bm": util_b1_fixed,
             "adaptive_vs_fixed_b1_util": util_b1 / util_b1_fixed,

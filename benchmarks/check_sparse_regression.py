@@ -12,6 +12,14 @@ wall-clock columns stay ungated (CI machines vary). Refresh the baseline
 on purposeful layout/kernel changes:
 
     PYTHONPATH=src python -m benchmarks.check_sparse_regression --update
+
+With ``--require-serving`` the serving artifact
+(``BENCH_serving_cnn.json``) is additionally gated — baseline-free hard
+floors, because both quantities have absolute contracts: steady-state
+cache hit-rate must be exactly 1.0 (any miss after warmup means the
+cache key or invalidation is broken, not that the machine is slow) and
+the bind-amortization ratio must clear the acceptance floor of 5x (a
+machine-speed-cancelling ratio of two walls on the same process).
 """
 from __future__ import annotations
 
@@ -22,6 +30,10 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(ROOT, "BENCH_sparse_cnn.json")
+SERVING_JSON = os.path.join(ROOT, "BENCH_serving_cnn.json")
+# serving gates: absolute floors, no baseline file needed
+SERVING_HIT_RATE_MIN = 1.0          # steady state must be all hits
+SERVING_AMORTIZATION_MIN = 5.0      # acceptance floor (bench observes ~100x)
 BASELINE_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "sparse_cnn_baseline.json")
 TARGET = 0.5
@@ -64,10 +76,31 @@ def _row_at(report: dict, target: float) -> dict:
     raise SystemExit(f"no row at target_group_sparsity={target} in report")
 
 
+def check_serving() -> list:
+    """Gate the serving artifact's absolute contracts; returns failures."""
+    if not os.path.exists(SERVING_JSON):
+        return [f"missing {SERVING_JSON} (run benchmarks.bench_serving_cnn)"]
+    with open(SERVING_JSON) as f:
+        rep = json.load(f)
+    failures = []
+    for key, floor in (("steady_hit_rate", SERVING_HIT_RATE_MIN),
+                       ("bind_amortization_ratio", SERVING_AMORTIZATION_MIN)):
+        cur = rep.get(key)
+        bad = cur is None or cur < floor - TOL
+        print(f"  {key:>44}: {cur if cur is not None else 'MISSING'} "
+              f"(floor {floor}) {'REGRESSED' if bad else 'ok'}")
+        if bad:
+            failures.append(key)
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from the current bench output")
+    ap.add_argument("--require-serving", action="store_true",
+                    help="also gate BENCH_serving_cnn.json (hit-rate, "
+                         "bind amortization)")
     args = ap.parse_args(argv)
 
     with open(BENCH_JSON) as f:
@@ -110,6 +143,8 @@ def main(argv=None) -> int:
         print(f"  {key:>44}: {cur:.6f} ({note}) {mark}")
         if bad:
             failures.append(key)
+    if args.require_serving:
+        failures += check_serving()
     if failures:
         print(f"\nexecuted-sparsity regression at {TARGET:.0%} group "
               f"sparsity: {failures}", file=sys.stderr)

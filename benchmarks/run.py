@@ -6,6 +6,7 @@ One module per paper table/figure:
   bench_inference        — Table II + Fig. 6 + Fig. 4
   bench_blocksparse      — beyond-paper TPU tile-HAPM kernel
   bench_sparse_cnn       — executed group-sparse CNN inference (DSB kernel)
+  bench_serving_cnn      — exec-cache serving driver (latency/hit-rate)
   bench_roofline         — assignment roofline table (reads dryrun_results.json)
 """
 from __future__ import annotations
@@ -16,7 +17,8 @@ import time
 import traceback
 
 from . import (bench_blocksparse, bench_cycle_model, bench_inference,
-               bench_roofline, bench_sparse_cnn, bench_training)
+               bench_roofline, bench_serving_cnn, bench_sparse_cnn,
+               bench_training)
 
 ALL = {
     "cycle_model": bench_cycle_model,
@@ -24,6 +26,7 @@ ALL = {
     "inference": bench_inference,
     "blocksparse": bench_blocksparse,
     "sparse_cnn": bench_sparse_cnn,
+    "serving_cnn": bench_serving_cnn,
     "roofline": bench_roofline,
 }
 

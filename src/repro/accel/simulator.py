@@ -19,9 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import quant as Q
-from ..core.groups import fpga_conv_groups
 from ..models import cnn
-from ..sparse.conv_plan import conv_gemm_layout
 from .config import AcceleratorConfig
 from .cycle_model import NetworkCycles, network_cycles
 
@@ -39,12 +37,15 @@ class SimulationReport:
     group_sparsity_per_layer: dict
     data_col_nonzero_frac: dict
     # Executed TPU dispatch accounting for the same group masks the cycle
-    # model prices, on BOTH tile layouts (sparse.conv_plan): the one-group-
-    # per-tile layout (dead tiles == skipped (g, f_block) schedule steps by
-    # construction) and the packed MXU-shaped layout (what the hardware
-    # actually dispatches — tiles cover many groups, accounting via per-tile
-    # occupancy). schedule_steps_* is the layout-independent paper
-    # granularity and equals the cycle model's DSB step count.
+    # model prices, via two accounting-only binds (bind_execution with
+    # bind_kernels=False) reported through SparseConvExec.report: the one-
+    # group-per-tile layout at fixed bm=128 (dead tiles == skipped
+    # (g, f_block) schedule steps by construction) and the packed MXU-
+    # shaped layout at the production contract — implicit kernel, adaptive
+    # bm — i.e. what the serving path actually dispatches (tiles cover
+    # many groups, accounting via per-tile occupancy). schedule_steps_* is
+    # the layout-independent paper granularity and equals the cycle
+    # model's DSB step count.
     grid_steps_per_layer: dict = dataclasses.field(default_factory=dict)
     executed_grid_steps: int = 0
     dense_grid_steps: int = 0
@@ -54,7 +55,8 @@ class SimulationReport:
     schedule_steps_total: int = 0
     padded_mac_utilization: float = 0.0      # packed layout, dispatched tiles
     pergroup_mac_utilization: float = 0.0    # one-group-per-tile layout
-    # HBM data-movement contract per image on the packed layout:
+    # HBM data-movement contract per image on the packed layout (the
+    # canonical hbm_bytes_* fields of SparseConvExec.report):
     # materializing (im2col patch matrix in HBM, fixed bm=128 — the PR-3
     # execution) vs implicit (in-kernel window gather from the NHWC
     # activation, adaptive bm), each priced with f32 operands AND with
@@ -121,13 +123,6 @@ class SimulationReport:
         }
 
 
-def _get(tree, path):
-    node = tree
-    for k in path:
-        node = node[k]
-    return node
-
-
 def _data_col_nonzero_frac(act: jnp.ndarray, cu_h: int) -> float:
     """Fraction of CU_h-tall data columns containing any non-zero value.
     ``act``: (B, H, W, C) post-quantization activations entering a conv."""
@@ -152,71 +147,44 @@ def simulate(
     qcfg = dataclasses.replace(cfg, quantized=True)
     dims = cnn.layer_dims(cfg, params)
 
-    # --- group masks from the actual (quantized) weights -------------------
-    from ..sparse.conv_plan import conv_hbm_bytes, conv_m_blocks
+    # --- dispatch + HBM accounting via accounting-only binds ---------------
+    # Two execs, no kernels (bind_kernels=False — plans/layouts/masks only),
+    # each reported through SparseConvExec.report so the simulator prices
+    # exactly what the executed path dispatches. quantized=True reproduces
+    # this simulator's skippability rule: masks from the Q2.5-quantized
+    # weights' zero groups.
+    # - per-group layout, materializing fixed bm=128: live tiles ARE the
+    #   live (g, f_block) schedule steps per M-block (paper granularity);
+    # - packed MXU-shaped layout at the production contract (implicit
+    #   kernel, adaptive bm): what the hardware actually dispatches.
+    pg = cnn.bind_execution(
+        params, cfg, bind_kernels=False,
+        spec=cnn.ExecSpec(packed=False, quantized=True, implicit=False,
+                          bm=128, n_cu=accel.n_cu))
+    pk = cnn.bind_execution(
+        params, cfg, bind_kernels=False,
+        spec=cnn.ExecSpec(packed=True, quantized=True, implicit=True,
+                          bm="auto", n_cu=accel.n_cu))
+    pg_rep = pg.report(cfg, batch=1, per_layer=True)
+    pk_rep = pk.report(cfg, batch=1, per_layer=True)
 
-    feat_of = {p: (stride, feat) for p, stride, feat in cnn.conv_layer_order(cfg)}
-    group_masks, layer_sparsity = [], {}
-    grid_steps, tot_exec, tot_dense = {}, 0, 0
-    pk_exec = pk_dense = sched_live = sched_total = 0
-    hbm_mat = hbm_imp = hbm_mat_q = hbm_imp_q = 0
-    bm_eff_per_layer = {}
-    util_num = {"packed": 0.0, "pergroup": 0.0}
-    util_den = {"packed": 0.0, "pergroup": 0.0}
-    for path, layer in dims:
-        w = Q.quantize(_get(params, path), Q.Q2_5)
-        spec = fpga_conv_groups(w.shape, accel.n_cu)
-        scores = np.asarray(spec.group_scores(w))
-        gm = (scores > 0).astype(np.float32)          # a group is skippable iff all-zero
+    group_masks, layer_sparsity, grid_steps, bm_eff_per_layer = [], {}, {}, {}
+    for path, _layer in dims:
+        name = "/".join(path)
+        gm = np.asarray(pg.group_masks_np[path])
         group_masks.append(gm)
-        layer_sparsity["/".join(path)] = float(1.0 - gm.mean())
-        # executed Pallas grid steps for the same mask (per image, bm=128),
-        # on both layouts: per-group (live tiles ARE the live (g, f_block)
-        # schedule steps) and packed (the MXU-shaped dispatch the TPU runs)
-        mb = -(-layer.out_x * layer.out_y // 128)
-        layouts = {"pergroup": conv_gemm_layout(spec),
-                   "packed": conv_gemm_layout(spec, packed=True)}
-        plan = layouts["pergroup"].plan(gm)
-        plan_pk = layouts["packed"].plan(gm)
-        ex, dn = mb * int(plan.cnt.sum()), mb * plan.tiles[0] * plan.tiles[1]
-        ex_pk = mb * int(plan_pk.cnt.sum())
-        dn_pk = mb * plan_pk.tiles[0] * plan_pk.tiles[1]
-        occ_live, occ_total = layouts["packed"].tile_occupancy(gm)
-        sched_live += int(occ_live.sum())
-        sched_total += int(occ_total.sum())
-        for kind, lo in layouts.items():
-            live_elems, area = lo.mac_accounting(gm)
-            util_num[kind] += mb * live_elems
-            util_den[kind] += mb * area
-        stride, feat = feat_of[path]
-        h_mat = conv_hbm_bytes(layouts["packed"], gm, 1, feat, feat, stride,
-                               "SAME", implicit=False, bm=128)
-        h_imp = conv_hbm_bytes(layouts["packed"], gm, 1, feat, feat, stride,
-                               "SAME", implicit=True, bm="auto")
-        # the quantized execution: int8 operand codes, f32 output writes
-        h_mat_q = conv_hbm_bytes(layouts["packed"], gm, 1, feat, feat, stride,
-                                 "SAME", implicit=False, bm=128,
-                                 operand_bytes=1)
-        h_imp_q = conv_hbm_bytes(layouts["packed"], gm, 1, feat, feat, stride,
-                                 "SAME", implicit=True, bm="auto",
-                                 operand_bytes=1)
-        bm_eff_per_layer["/".join(path)] = conv_m_blocks(
-            layer.out_x, layer.out_y, 1, bm="auto", implicit=True)[1]
-        grid_steps["/".join(path)] = {"executed": ex, "dense": dn,
-                                      "packed_executed": ex_pk,
-                                      "packed_dense": dn_pk,
-                                      "hbm_materialized": h_mat,
-                                      "hbm_implicit": h_imp,
-                                      "hbm_materialized_int8": h_mat_q,
-                                      "hbm_implicit_int8": h_imp_q}
-        hbm_mat += h_mat
-        hbm_imp += h_imp
-        hbm_mat_q += h_mat_q
-        hbm_imp_q += h_imp_q
-        tot_exec += ex
-        tot_dense += dn
-        pk_exec += ex_pk
-        pk_dense += dn_pk
+        layer_sparsity[name] = float(1.0 - gm.mean())
+        pg_l, pk_l = pg_rep["per_layer"][name], pk_rep["per_layer"][name]
+        # per-layer HBM contracts priced on the packed (dispatched) layout
+        grid_steps[name] = {"executed": pg_l["executed"],
+                            "dense": pg_l["dense"],
+                            "packed_executed": pk_l["executed"],
+                            "packed_dense": pk_l["dense"],
+                            "hbm_materialized": pk_l["hbm_materialized"],
+                            "hbm_implicit": pk_l["hbm_implicit"],
+                            "hbm_materialized_int8": pk_l["hbm_materialized_int8"],
+                            "hbm_implicit_int8": pk_l["hbm_implicit_int8"]}
+        bm_eff_per_layer[name] = pk_l["bm_effective"]
 
     # --- optional activation-side bypass measurement -----------------------
     data_fracs = [1.0] * len(dims)
@@ -248,20 +216,18 @@ def simulate(
         group_sparsity_per_layer=layer_sparsity,
         data_col_nonzero_frac=col_fracs,
         grid_steps_per_layer=grid_steps,
-        executed_grid_steps=tot_exec,
-        dense_grid_steps=tot_dense,
-        packed_executed_grid_steps=pk_exec,
-        packed_dense_grid_steps=pk_dense,
-        schedule_steps_live=sched_live,
-        schedule_steps_total=sched_total,
-        padded_mac_utilization=(util_num["packed"] / util_den["packed"]
-                                if util_den["packed"] else 0.0),
-        pergroup_mac_utilization=(util_num["pergroup"] / util_den["pergroup"]
-                                  if util_den["pergroup"] else 0.0),
-        hbm_bytes_materialized=hbm_mat,
-        hbm_bytes_implicit=hbm_imp,
-        hbm_bytes_materialized_int8=hbm_mat_q,
-        hbm_bytes_implicit_int8=hbm_imp_q,
+        executed_grid_steps=pg_rep["executed_grid_steps"],
+        dense_grid_steps=pg_rep["dense_grid_steps"],
+        packed_executed_grid_steps=pk_rep["executed_grid_steps"],
+        packed_dense_grid_steps=pk_rep["dense_grid_steps"],
+        schedule_steps_live=pk_rep["schedule_steps_live"],
+        schedule_steps_total=pk_rep["schedule_steps_total"],
+        padded_mac_utilization=pk_rep["padded_mac_utilization"],
+        pergroup_mac_utilization=pg_rep["padded_mac_utilization"],
+        hbm_bytes_materialized=pk_rep["hbm_bytes_materialized"],
+        hbm_bytes_implicit=pk_rep["hbm_bytes_implicit"],
+        hbm_bytes_materialized_int8=pk_rep["hbm_bytes_materialized_int8"],
+        hbm_bytes_implicit_int8=pk_rep["hbm_bytes_implicit_int8"],
         bm_effective_per_layer=bm_eff_per_layer,
     )
 

@@ -1,0 +1,281 @@
+"""CNN serving driver: HAPM block-sparse inference behind the persistent
+exec cache.
+
+The vision twin of :mod:`repro.launch.serve`: where the LM driver jits
+prefill/decode once for one shape, CNN serving sees arbitrary request
+batch sizes and (between HAPM epochs) a *moving* sparsity pattern. The
+:class:`CnnServer` absorbs both:
+
+- requests of any size are chunked/padded onto the bucket grid
+  (:func:`repro.launch.exec_cache.bucket_for`), so only ``len(buckets)``
+  jitted programs exist per bind — and because eval-mode inference is
+  per-image independent, sliced outputs are bit-identical to a fresh
+  unbucketed bind;
+- every bucket's program shares one :class:`~repro.models.cnn.ExecSpec`
+  bind (plan construction + int8 weight prepacking paid once), looked up
+  in an :class:`~repro.launch.exec_cache.ExecCache` keyed on
+  ``(arch, sparsity fingerprint, spec, bucket)``;
+- :meth:`CnnServer.update_masks` installs post-HAPM-epoch weights: the
+  mask fingerprint is recomputed host-side (no bind) and exactly the
+  stale cache entries are invalidated — steady-state serving between
+  epochs never re-plans, re-packs, or re-jits.
+
+``python -m repro.launch.serve_cnn --smoke`` runs the driver standalone;
+:mod:`benchmarks.bench_serving_cnn` measures it.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import cnn
+from ..sparse.conv_plan import mask_fingerprint
+from .exec_cache import (DEFAULT_BUCKETS, BucketBatcher, CacheEntry,
+                         ExecCache, arch_fingerprint, bucket_for)
+
+
+class CnnServer:
+    """Serve ``cnn.apply`` / ``cnn.apply_folded`` through the exec cache.
+
+    ``spec`` fixes the execution contract for every request this server
+    answers (packed/implicit/quantized/folded/bm — one server, one
+    contract; run two servers over one shared :class:`ExecCache` for
+    mixed fleets). The run config's ``quantized`` flag follows the spec,
+    so a quantized bind serves a quantized forward without the caller
+    threading two switches.
+    """
+
+    def __init__(self, params, state, cfg: cnn.ResNetConfig, *,
+                 spec: Optional[cnn.ExecSpec] = None,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 cache: Optional[ExecCache] = None,
+                 cache_capacity: int = 16):
+        self.spec = cnn.ExecSpec() if spec is None else spec
+        self.buckets = tuple(sorted(buckets))
+        self.cache = ExecCache(cache_capacity) if cache is None else cache
+        self.cfg = cfg
+        self.run_cfg = (cfg if cfg.quantized == self.spec.quantized else
+                        dataclasses.replace(cfg, quantized=self.spec.quantized))
+        self._install(params, state)
+
+    # -- model / fingerprint state ------------------------------------
+    def _install(self, params, state) -> None:
+        self.params, self.state = params, state
+        if self.spec.folded:
+            self._tree = cnn.fold_batchnorm(params, state, self.cfg)
+            conv_tree = {k: v for k, v in self._tree.items() if k != "fc"}
+            masks = cnn.derive_group_masks(conv_tree, self.spec.n_cu)
+        else:
+            self._tree = params
+            masks = cnn.derive_group_masks(params, self.spec.n_cu,
+                                           quantized=self.spec.quantized)
+        self.group_masks = masks
+        self.arch_fp = arch_fingerprint(self.cfg, params)
+        self.mask_fp = mask_fingerprint(masks)
+
+    @property
+    def bind_key(self) -> tuple:
+        return (self.arch_fp, self.mask_fp, self.spec)
+
+    def update_masks(self, params, state=None) -> int:
+        """Install new weights (a HAPM epoch pruned more groups, or a
+        finetune step moved values) and invalidate exactly the stale
+        cache entries. The sparsity fingerprint is recomputed host-side —
+        no bind happens until the next request. Entries survive only when
+        nothing changed at all (same arrays, same pattern): a bind is
+        pinned to its exact weight arrays, so same-pattern-new-values
+        still rebinds. Returns the number of entries invalidated."""
+        old_leaves = jax.tree_util.tree_leaves(self._tree)
+        self._install(params, self.state if state is None else state)
+        new_leaves = jax.tree_util.tree_leaves(self._tree)
+        unchanged = (len(old_leaves) == len(new_leaves) and
+                     all(a is b for a, b in zip(old_leaves, new_leaves)))
+        return self.cache.invalidate(
+            self.arch_fp, keep_mask_fp=self.mask_fp if unchanged else None)
+
+    # -- exec / jit plumbing ------------------------------------------
+    def _bind(self) -> Any:
+        exec_ = self.cache.shared_exec(self.bind_key)
+        if exec_ is None:
+            exec_ = cnn.bind_execution(self._tree, self.cfg, spec=self.spec,
+                                       group_masks=self.group_masks)
+            self.cache.binds += 1
+        return exec_
+
+    def _fn_for(self, bucket: int) -> CacheEntry:
+        key = self.bind_key + (bucket,)
+        entry = self.cache.get(key)
+        if entry is not None:
+            return entry
+        exec_ = self._bind()
+        tree, run_cfg, state = self._tree, self.run_cfg, self.state
+        if self.spec.folded:
+            fn = jax.jit(lambda x: cnn.apply_folded(tree, x, run_cfg,
+                                                    sparse=exec_))
+        else:
+            fn = jax.jit(lambda x: cnn.apply(tree, state, x, run_cfg,
+                                             train=False, sparse=exec_)[0])
+        return self.cache.put(key, CacheEntry(exec_=exec_, fn=fn,
+                                              bucket=bucket))
+
+    def warmup(self, buckets: Optional[Sequence[int]] = None) -> None:
+        """Bind once and trace every bucket's program (first-call jit cost
+        paid here, not on a live request)."""
+        h = self.cfg.image_size
+        for b in (self.buckets if buckets is None else buckets):
+            entry = self._fn_for(b)
+            np.asarray(entry.fn(jnp.zeros((b, h, h, 3), jnp.float32)))
+
+    # -- request path --------------------------------------------------
+    def infer(self, images) -> jnp.ndarray:
+        """Logits for ``images`` (B, H, W, 3), any B: chunked into
+        max-bucket pieces, each padded up to its bucket and sliced back —
+        bit-identical to an unbucketed forward (per-image independence)."""
+        images = jnp.asarray(images)
+        n, out = images.shape[0], []
+        max_b = self.buckets[-1]
+        for lo in range(0, n, max_b):
+            chunk = images[lo:lo + max_b]
+            bucket = bucket_for(chunk.shape[0], self.buckets)
+            entry = self._fn_for(bucket)
+            if chunk.shape[0] < bucket:
+                pad = jnp.zeros((bucket - chunk.shape[0],) + chunk.shape[1:],
+                                chunk.dtype)
+                out.append(entry.fn(jnp.concatenate([chunk, pad]))
+                           [:chunk.shape[0]])
+            else:
+                out.append(entry.fn(chunk))
+        return out[0] if len(out) == 1 else jnp.concatenate(out)
+
+    def report(self, batch: int = 1, **kw) -> Dict[str, Any]:
+        """The bind's :meth:`SparseConvExec.report` accounting (per-image
+        HBM bytes etc.) without touching the request path."""
+        return self._bind().report(self.cfg, batch=batch, **kw)
+
+    def stats(self) -> Dict[str, Any]:
+        return dict(self.cache.stats(), mask_fp=self.mask_fp[:12],
+                    arch_fp=self.arch_fp[:12], buckets=list(self.buckets))
+
+
+def simulate_trace(batcher: BucketBatcher,
+                   arrivals: Sequence[Tuple[float, int]],
+                   service_time_s) -> Dict[str, Any]:
+    """Virtual-clock queueing simulation: drive ``batcher`` with an
+    arrival trace (``(t_seconds, n_images)`` per request) and a measured
+    per-bucket service time (``service_time_s(bucket) -> s``), with no
+    wall-clock sleeps. Request latency = (release - arrival) + service
+    time of the released bucket. Returns p50/p99 latency, per-bucket
+    release counts, and mean bucket fill (released images / bucket
+    capacity) — the number the max-wait deadline is tuning."""
+    submit_t: Dict[int, float] = {}
+    latency: List[float] = []
+    releases: Dict[int, int] = {}
+    fill_img = fill_cap = 0
+
+    def record(now: float, batches) -> None:
+        nonlocal fill_img, fill_cap
+        for bucket, ids in batches:
+            done = now + service_time_s(bucket)
+            releases[bucket] = releases.get(bucket, 0) + 1
+            fill_cap += bucket
+            for rid in ids:
+                latency.append(done - submit_t.pop(rid))
+            fill_img += len(ids)   # single-image requests: ids == images
+
+    for t, n in sorted(arrivals):
+        # fire deadline flushes that elapse before this arrival
+        while len(batcher):
+            t_dl = batcher._pending[0].t_submit + batcher.max_wait_s
+            if t_dl >= t:
+                break
+            # polling at exactly the deadline can miss it in floating
+            # point ((t_submit + w) - t_submit < w); force the drain then
+            record(t_dl, batcher.poll(t_dl) or batcher.poll(t_dl, flush=True))
+        for _ in range(n):       # one batcher request per image
+            submit_t[batcher.submit(1, t)] = t
+        record(t, batcher.poll(t))
+    t_end = (max(p.t_submit for p in batcher._pending) + batcher.max_wait_s
+             if len(batcher) else (sorted(arrivals)[-1][0] if arrivals else 0))
+    record(t_end, batcher.poll(t_end, flush=True))
+
+    lat = np.asarray(sorted(latency)) if latency else np.zeros(1)
+    return {"requests": len(latency),
+            "p50_s": float(np.percentile(lat, 50)),
+            "p99_s": float(np.percentile(lat, 99)),
+            "releases": {str(k): v for k, v in sorted(releases.items())},
+            "mean_bucket_fill": fill_img / fill_cap if fill_cap else 0.0}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="CNN serving driver (HAPM "
+                                 "block-sparse exec cache)")
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="number of single-image requests to serve")
+    ap.add_argument("--sparsity", type=float, default=0.5)
+    ap.add_argument("--quantized", action="store_true")
+    ap.add_argument("--folded", action="store_true")
+    ap.add_argument("--buckets", type=int, nargs="+", default=None)
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.core import (HAPMConfig, apply_masks, hapm_element_masks,
+                            hapm_epoch_update, hapm_init)
+
+    if args.smoke:
+        cfg = cnn.ResNetConfig(stages=(1, 1), widths=(8, 16), image_size=16)
+        buckets = tuple(args.buckets or (1, 4, 8))
+        n_req = args.requests or 6
+        n_cu = 4
+    else:
+        cfg = cnn.ResNetConfig()
+        buckets = tuple(args.buckets or DEFAULT_BUCKETS)
+        n_req = args.requests or 32
+        n_cu = 12
+    params, state = cnn.init(jax.random.PRNGKey(args.seed), cfg)
+    specs = cnn.conv_group_specs(params, n_cu)
+    hcfg = HAPMConfig(args.sparsity, 1)
+    st = hapm_epoch_update(hapm_init(specs, hcfg), specs, params, hcfg)
+    pruned = apply_masks(params, hapm_element_masks(specs, st))
+
+    spec = cnn.ExecSpec(quantized=args.quantized, folded=args.folded,
+                        n_cu=n_cu)
+    server = CnnServer(pruned, state, cfg, spec=spec, buckets=buckets)
+    t0 = time.time()
+    server.warmup()
+    print(f"[warmup] {len(buckets)} buckets, {server.cache.binds} bind(s) "
+          f"in {time.time() - t0:.2f}s")
+
+    rng = np.random.RandomState(args.seed)
+    h = cfg.image_size
+    per_req = []
+    for _ in range(n_req):
+        x = rng.rand(1, h, h, 3).astype(np.float32)
+        t0 = time.time()
+        np.asarray(server.infer(x))
+        per_req.append(time.time() - t0)
+    lat = np.asarray(per_req)
+    print(f"[serve] {n_req} single-image requests: "
+          f"p50 {np.percentile(lat, 50) * 1e3:.1f} ms, "
+          f"p99 {np.percentile(lat, 99) * 1e3:.1f} ms")
+    print(f"[cache] {server.stats()}")
+
+    # queueing behavior under a bursty arrival trace (virtual clock)
+    batcher = BucketBatcher(buckets, max_wait_s=args.max_wait_ms / 1e3)
+    svc = {b: float(np.median(lat)) for b in buckets}
+    trace = [(float(t), 1) for t in
+             np.cumsum(rng.exponential(args.max_wait_ms / 2e3, 4 * n_req))]
+    sim = simulate_trace(batcher, trace, lambda b: svc[b])
+    print(f"[batcher] {sim}")
+
+
+if __name__ == "__main__":
+    main()

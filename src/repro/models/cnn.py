@@ -11,6 +11,8 @@ method in :mod:`repro.core`.
 from __future__ import annotations
 
 import dataclasses
+import warnings
+from collections import OrderedDict
 from typing import Any, Optional, Tuple
 
 import jax
@@ -227,6 +229,40 @@ def _get_path(tree, keys):
 
 
 @dataclasses.dataclass(frozen=True)
+class ExecSpec:
+    """The execution contract of one bind: every knob that changes the
+    compiled artifact :func:`bind_execution` produces. Frozen and hashable
+    on purpose — it doubles as the spec component of the serving exec-cache
+    key (``launch.exec_cache``: ``(arch fp, sparsity fp, spec, bucket)``),
+    so two binds compare equal iff they are interchangeable.
+
+    ``packed``: MXU-shaped multi-group tiles vs one (g, f_block) group per
+    tile. ``quantized``: native int8 Q2.5×Q3.4 execution (per-cout
+    calibrated scales when ``folded``). ``folded``: the tree is
+    ``fold_batchnorm`` output and the bias/ReLU epilogue is fused at the
+    kernel flush (consume with :func:`apply_folded`). ``implicit``: the
+    in-kernel window-gather data-movement contract (``None`` = auto on
+    channel-major layouts). ``bm``: M-blocking policy, ``"auto"`` or a
+    fixed int. ``n_cu``: the schedule-group granularity. Layers whose plan
+    density reaches ``dense_fallback`` stay on dense ``lax.conv``.
+    """
+
+    packed: bool = True
+    quantized: bool = False
+    folded: bool = False
+    implicit: Optional[bool] = None
+    bm: Any = "auto"
+    n_cu: int = 12
+    dense_fallback: float = 0.999
+
+    def __post_init__(self):
+        if self.bm != "auto" and not isinstance(self.bm, int):
+            raise ValueError(f"bm must be 'auto' or an int, got {self.bm!r}")
+        if self.n_cu < 1:
+            raise ValueError(f"n_cu must be >= 1, got {self.n_cu}")
+
+
+@dataclasses.dataclass(frozen=True)
 class SparseConvExec:
     """Static dispatch table for the group-sparse conv path: conv param path
     -> bound block-sparse conv (``sparse.conv_plan.make_sparse_conv``, the
@@ -247,12 +283,26 @@ class SparseConvExec:
     bound_weights: Any = None        # {path: source weight} — staleness check
     implicit: bool = False           # convs bound to the implicit-im2col kernel
     bm: Any = 128                    # M-blocking policy: int (fixed) or "auto"
+    spec: Optional[ExecSpec] = None  # the requested bind contract, if built
+                                     # through bind_execution
 
-    def _m_blocks(self, out: int, batch: int, bm=None):
+    def _accounting(self, bm=None, implicit=None, operand_bytes=None,
+                    dtype_bytes: int = 4):
+        """The single default-resolution point for every accounting query:
+        ``None`` means "this exec's own policy" — ``bm`` resolves to the
+        bind-time M-blocking, ``implicit`` to the bound data-movement
+        contract, ``operand_bytes`` to 1 byte for a quantized (int8-code)
+        exec and ``dtype_bytes`` otherwise (the output write is always
+        priced at ``dtype_bytes``)."""
+        return (self.bm if bm is None else bm,
+                self.implicit if implicit is None else implicit,
+                ((1 if self.quantized else dtype_bytes)
+                 if operand_bytes is None else operand_bytes))
+
+    def _m_blocks(self, out: int, batch: int, bm=None, implicit=None):
         from ..sparse.conv_plan import conv_m_blocks
-        return conv_m_blocks(out, out, batch,
-                             bm=self.bm if bm is None else bm,
-                             implicit=self.implicit)
+        bm, implicit, _ = self._accounting(bm, implicit)
+        return conv_m_blocks(out, out, batch, bm=bm, implicit=implicit)
 
     def step_counts(self, cfg: ResNetConfig, batch: int = 1, bm=None):
         """(executed, dense) dispatched grid steps over the whole network —
@@ -269,9 +319,13 @@ class SparseConvExec:
             dense += mb * plan.tiles[0] * plan.tiles[1]
         return executed, dense
 
-    def bm_effective(self, cfg: ResNetConfig, batch: int = 1, bm=None):
-        """{layer-path: effective bm} under this exec's M-blocking policy."""
-        return {"/".join(path): self._m_blocks(-(-feat // stride), batch, bm)[1]
+    def bm_effective(self, cfg: ResNetConfig, batch: int = 1, bm=None,
+                     implicit=None):
+        """{layer-path: effective bm} under this exec's M-blocking policy
+        (``bm``/``implicit`` override it, e.g. the canonical adaptive
+        implicit contract regardless of the bind)."""
+        return {"/".join(path):
+                self._m_blocks(-(-feat // stride), batch, bm, implicit)[1]
                 for path, stride, feat in conv_layer_order(cfg)}
 
     def hbm_bytes(self, cfg: ResNetConfig, batch: int = 1,
@@ -280,21 +334,18 @@ class SparseConvExec:
         """Analytic HBM bytes one forward moves through the conv layers
         (``sparse.conv_plan.conv_hbm_bytes`` summed over the network) —
         patch-matrix traffic for the materializing path, activation-slab
-        streaming for the implicit one. ``implicit=None`` → the exec's
-        own path. ``operand_bytes=None`` → the exec's own operand width:
-        1 byte for a quantized (int8-code) exec, ``dtype_bytes`` for the
-        f32 one; the output write is always priced at ``dtype_bytes``."""
+        streaming for the implicit one. Defaults resolve through
+        :meth:`_accounting`: the exec's own contract, M-blocking, and
+        operand width (1 byte when quantized)."""
         from ..sparse.conv_plan import conv_hbm_bytes
-        use_implicit = self.implicit if implicit is None else implicit
-        if operand_bytes is None:
-            operand_bytes = 1 if self.quantized else dtype_bytes
+        bm, use_implicit, operand_bytes = self._accounting(
+            bm, implicit, operand_bytes, dtype_bytes)
         total = 0
         for path, stride, feat in conv_layer_order(cfg):
             total += conv_hbm_bytes(
                 self.layouts[path], self.group_masks_np[path], batch, feat,
                 feat, stride, "SAME", implicit=use_implicit,
-                bm=self.bm if bm is None else bm, dtype_bytes=dtype_bytes,
-                operand_bytes=operand_bytes)
+                bm=bm, dtype_bytes=dtype_bytes, operand_bytes=operand_bytes)
         return total
 
     def schedule_step_counts(self):
@@ -327,6 +378,80 @@ class SparseConvExec:
             den += mb * bm_eff * area
         return num / den if den else 0.0
 
+    def report(self, cfg: ResNetConfig, batch: int = 1, *,
+               dtype_bytes: int = 4, per_layer: bool = False) -> dict:
+        """Every accounting field in one dict — the single artifact the
+        simulator (``accel.simulator``), the benches and the serving driver
+        (``launch.serve_cnn``) consume instead of each re-assembling the
+        same step/HBM/utilization numbers from the individual methods.
+
+        The ``hbm_bytes_{materialized,implicit}[_int8]`` fields price the
+        two data-movement contracts at their *defining* M-blocking
+        (materializing: fixed ``bm=128``, the PR-3 contract; implicit:
+        adaptive ``bm="auto"``) and at f32 / int8 operand widths — they are
+        properties of the plans, independent of which contract this exec
+        happens to bind. ``hbm_bytes`` and the grid-step fields describe
+        the exec's *own* policy (own contract, own ``bm``, own operand
+        width). ``per_layer=True`` adds the same fields per conv layer
+        (keys ``"/".join(path)``), which is what the simulator reports
+        next to the cycle model."""
+        executed, dense = self.step_counts(cfg, batch=batch)
+        live, total = self.schedule_step_counts()
+        hbm = lambda imp, bm, ob: self.hbm_bytes(
+            cfg, batch, implicit=imp, bm=bm, dtype_bytes=dtype_bytes,
+            operand_bytes=ob)
+        rep = {
+            "batch": batch,
+            "n_cu": self.n_cu,
+            "quantized": self.quantized,
+            "folded": self.folded,
+            "implicit": self.implicit,
+            "bm": self.bm,
+            "executed_grid_steps": executed,
+            "dense_grid_steps": dense,
+            "grid_step_ratio": executed / max(dense, 1),
+            "schedule_steps_live": live,
+            "schedule_steps_total": total,
+            "schedule_step_ratio": live / max(total, 1),
+            "padded_mac_utilization": self.mac_utilization(cfg, batch=batch),
+            "dense_fallback_layers": sum(v is None
+                                         for v in self.table.values()),
+            "bm_effective": self.bm_effective(cfg, batch=batch),
+            "hbm_bytes": self.hbm_bytes(cfg, batch, dtype_bytes=dtype_bytes),
+            "hbm_bytes_materialized": hbm(False, 128, dtype_bytes),
+            "hbm_bytes_implicit": hbm(True, "auto", dtype_bytes),
+            "hbm_bytes_materialized_int8": hbm(False, 128, 1),
+            "hbm_bytes_implicit_int8": hbm(True, "auto", 1),
+        }
+        rep["hbm_bytes_ratio"] = (rep["hbm_bytes_implicit"]
+                                  / max(rep["hbm_bytes_materialized"], 1))
+        if per_layer:
+            rep["per_layer"] = self._per_layer_report(cfg, batch, dtype_bytes)
+        return rep
+
+    def _per_layer_report(self, cfg: ResNetConfig, batch: int,
+                          dtype_bytes: int) -> dict:
+        from ..sparse.conv_plan import conv_hbm_bytes
+        out = {}
+        for path, stride, feat in conv_layer_order(cfg):
+            plan = self.plans[path]
+            o = -(-feat // stride)
+            mb, bm_eff = self._m_blocks(o, batch)
+            hbm = lambda imp, bm, ob: conv_hbm_bytes(
+                self.layouts[path], self.group_masks_np[path], batch, feat,
+                feat, stride, "SAME", implicit=imp, bm=bm,
+                dtype_bytes=dtype_bytes, operand_bytes=ob)
+            out["/".join(path)] = {
+                "executed": mb * int(plan.cnt.sum()),
+                "dense": mb * plan.tiles[0] * plan.tiles[1],
+                "bm_effective": bm_eff,
+                "hbm_materialized": hbm(False, 128, dtype_bytes),
+                "hbm_implicit": hbm(True, "auto", dtype_bytes),
+                "hbm_materialized_int8": hbm(False, 128, 1),
+                "hbm_implicit_int8": hbm(True, "auto", 1),
+            }
+        return out
+
 
 def _bind_conv_layers(tree: PyTree, specs: PyTree, group_masks: PyTree,
                       n_cu: int, packed: bool, weight_of, bind_one):
@@ -353,7 +478,15 @@ def _bind_conv_layers(tree: PyTree, specs: PyTree, group_masks: PyTree,
         keys = tuple(getattr(k, "key", str(k)) for k in path)
         w = weight_of(leaf)
         spec = _get_path(specs, keys)
-        gm = None if group_masks is None else _get_path(group_masks, keys)
+        if group_masks is None:
+            gm = None
+        elif (isinstance(group_masks, dict)
+              and all(isinstance(k, tuple) for k in group_masks)):
+            # flat {path-tuple: mask} form (exec.group_masks_np /
+            # derive_group_masks) alongside the params-shaped pytree form
+            gm = group_masks.get(keys)
+        else:
+            gm = _get_path(group_masks, keys)
         if gm is None:
             # tile specs score the 2-D im2col matrix, not the HWIO tensor
             w2 = w.reshape(spec.shape) if w.shape != spec.shape else w
@@ -367,6 +500,35 @@ def _bind_conv_layers(tree: PyTree, specs: PyTree, group_masks: PyTree,
     return table, plans, layouts, gms, bound
 
 
+def derive_group_masks(tree: PyTree, n_cu: int, *,
+                       quantized: bool = False,
+                       specs: PyTree = None) -> "dict[tuple, np.ndarray]":
+    """The bind loop's default mask rule, standalone: per conv layer the
+    {0,1} live-group mask from the weights' zero slabs
+    (``group_scores(w) > 0``, scored on the Q2.5-quantized view when
+    ``quantized`` — a group whose every value quantizes to zero is
+    skippable in fixed-point execution even if not exactly zero in f32).
+    Returned flat (``{path-tuple: mask}``), ready both for
+    ``bind_execution(group_masks=...)`` and for
+    :func:`repro.sparse.conv_plan.mask_fingerprint` — the serving cache
+    fingerprints the sparsity pattern *without* paying a bind."""
+    if specs is None:
+        specs = conv_group_specs(tree, n_cu)
+    weight_of = ((lambda l: Q.quantize(l, Q.Q2_5)) if quantized
+                 else (lambda l: l))
+    masks = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if not is_conv_weight(path, leaf):
+            continue
+        keys = tuple(getattr(k, "key", str(k)) for k in path)
+        w = weight_of(leaf)
+        spec = _get_path(specs, keys)
+        w2 = w.reshape(spec.shape) if w.shape != spec.shape else w
+        masks[keys] = np.asarray(
+            np.asarray(spec.group_scores(w2)) > 0, np.float32)
+    return masks
+
+
 def _resolve_exec_implicit(implicit: Optional[bool], layouts) -> bool:
     """The exec-level execution contract: what the builder *requested*
     (resolved against layout capability), not which layers happened to
@@ -376,6 +538,114 @@ def _resolve_exec_implicit(implicit: Optional[bool], layouts) -> bool:
     capable = any(lo.implicit_geometry() is not None
                   for lo in layouts.values())
     return capable if implicit is None else bool(implicit) and capable
+
+
+def bind_execution(
+    params: PyTree,
+    cfg: Optional[ResNetConfig] = None,
+    *,
+    spec: Optional[ExecSpec] = None,
+    specs: PyTree = None,
+    group_masks: PyTree = None,
+    quant_spec: Any = None,
+    bind_kernels: bool = True,
+) -> SparseConvExec:
+    """The one bind entry point: every conv layer of ``params`` onto the
+    Pallas block-sparse kernels under the execution contract ``spec``
+    (an :class:`ExecSpec`; default: packed layout, auto-implicit kernel,
+    adaptive M-blocking, f32). The two legacy builders —
+    :func:`build_sparse_execution` and :func:`build_sparse_inference` —
+    are thin deprecated wrappers over this.
+
+    ``spec.folded=False`` (plain bind): ``params`` is the raw param tree.
+    With ``spec.quantized`` every bound layer prepacks **int8 Q2.5 weight
+    codes** (pruned groups stay zero codes) plus the per-cout dequant
+    scale row, quantizes its input activation to int8 Q3.4 codes per
+    call, and runs int8-operand / int32-accumulate kernels with the
+    dequant fused at the flush — bit-exact vs a ``cfg.quantized`` dense
+    forward. ``quant_spec`` overrides the static formats with a custom
+    :class:`repro.core.quant.QuantSpec`. Consume with :func:`apply`.
+
+    ``spec.folded=True``: ``params`` is ``fold_batchnorm`` output (per-conv
+    ``{"w", "b"}``) and the bias — plus ReLU where the network applies it
+    directly after BN (conv0, every conv1) — is fused at the kernel's
+    flush step. With ``spec.quantized`` each layer gets **per-cout
+    calibrated** weight scales (BN folding scales channels arbitrarily, so
+    the static Q2.5 grid would clip); ``quant_spec`` is rejected here.
+    Consume with :func:`apply_folded`.
+
+    ``cfg`` is accepted for signature uniformity across the two bind
+    flavors (layer topology comes from the tree itself; a future
+    cfg-dependent bind — e.g. HPIPE-style layer fusion — slots in without
+    changing call sites). ``specs``: GroupSpec tree (default:
+    ``conv_group_specs(params, spec.n_cu)``). ``group_masks``:
+    (num_groups,) {0,1} per conv leaf (e.g. ``HAPMState.group_masks``);
+    ``None`` derives masks from the weights' zero slabs
+    (``group_scores(w) > 0``, on the Q2.5-quantized view when
+    ``spec.quantized``), matching the simulator's skippability rule.
+    ``bind_kernels=False`` builds an **accounting-only** exec: plans,
+    layouts and group masks for :meth:`SparseConvExec.report`, with every
+    table entry ``None`` — no kernel closures, no weight packing (what
+    ``accel.simulator`` prices).
+
+    Host-side: requires concrete weights (plans are numpy; raises under
+    jit — prebuild and pass the exec in); the bound kernels are jitted.
+    The exec is pinned to these exact weight arrays — ``apply`` rejects a
+    concrete params tree whose conv leaves differ (rebind after updates,
+    or serve through ``launch.exec_cache`` which re-keys on the sparsity
+    fingerprint).
+    """
+    from ..sparse.conv_plan import make_sparse_conv
+
+    spec = ExecSpec() if spec is None else spec
+    if spec.folded:
+        if quant_spec is not None:
+            raise ValueError(
+                "folded binds calibrate per-cout scales per layer — a "
+                "global quant_spec would clip BN-scaled channels; it is "
+                "plain-exec only")
+        tree = {k: v for k, v in params.items() if k != "fc"}
+        weight_of = lambda l: l
+
+        def bind_one(keys, w, layout, gm, plan, leaf):
+            if not bind_kernels or plan.density >= spec.dense_fallback:
+                return None
+            bias = _get_path(params, keys[:-1])["b"]
+            relu = keys[-2] in ("conv0", "conv1")   # ReLU directly after BN
+            quant = Q.QuantSpec.calibrate(w) if spec.quantized else None
+            return make_sparse_conv(layout, gm, bm=spec.bm, weight=w,
+                                    bias=bias, relu=relu,
+                                    implicit=spec.implicit, quant=quant)
+    else:
+        if quant_spec is not None and not spec.quantized:
+            raise ValueError("quant_spec without quantized=True would be "
+                             "silently ignored — pass quantized=True")
+        qspec = (quant_spec or Q.QuantSpec()) if spec.quantized else None
+        tree = params
+        weight_of = ((lambda l: Q.quantize(l, Q.Q2_5)) if spec.quantized
+                     else (lambda l: l))
+
+        def bind_one(keys, w, layout, gm, plan, leaf):
+            # quantized: bind the RAW weight — the quant spec emits the
+            # codes itself, and a calibrated spec must not see values
+            # pre-clipped to the static Q2.5 grid (for the static spec the
+            # two are identical: round(fake_quant(w)·2^5) == round(w·2^5))
+            if not bind_kernels or plan.density >= spec.dense_fallback:
+                return None
+            return make_sparse_conv(layout, gm, bm=spec.bm,
+                                    weight=leaf if spec.quantized else w,
+                                    implicit=spec.implicit, quant=qspec)
+
+    table, plans, layouts, gms, bound = _bind_conv_layers(
+        tree, specs, group_masks, spec.n_cu, spec.packed, weight_of,
+        bind_one)
+    return SparseConvExec(table=table, plans=plans, n_cu=spec.n_cu,
+                          layouts=layouts, group_masks_np=gms,
+                          quantized=spec.quantized, folded=spec.folded,
+                          bound_weights=bound,
+                          implicit=_resolve_exec_implicit(spec.implicit,
+                                                          layouts),
+                          bm=spec.bm, spec=spec)
 
 
 def build_sparse_execution(
@@ -391,69 +661,22 @@ def build_sparse_execution(
     quant_spec: Any = None,
     implicit: Optional[bool] = None,
 ) -> SparseConvExec:
-    """Bind every conv layer to the Pallas block-sparse kernel, prepacking
-    the masked weight once at bind time — as f32, or as **int8 codes**
-    with ``quantized=True`` (native Q2.5 × Q3.4 fixed-point execution).
+    """Deprecated: use ``bind_execution(params, spec=ExecSpec(...))``.
 
-    ``specs``: GroupSpec tree (default: ``conv_group_specs(params, n_cu)``).
-    ``group_masks``: (num_groups,) {0,1} per conv leaf (e.g.
-    ``HAPMState.group_masks``); when ``None``, masks are derived from the
-    weights' zero slabs (``group_scores(w) > 0``), matching the simulator's
-    skippability rule. Layers whose plan density reaches ``dense_fallback``
-    stay on dense ``lax.conv`` (a full grid would only add padding work).
-    ``packed``: use the multi-group MXU-shaped tile layout
-    (``conv_gemm_layout(spec, packed=True)``) instead of one tile per
-    (g, f_block) group — far fewer grid steps at the same pruning.
-    ``quantized``: *native fixed-point execution*. Every bound layer
-    prepacks **int8 Q2.5 weight codes** (pruned groups stay zero codes)
-    plus the per-cout dequant scale row, quantizes its input activation
-    to int8 Q3.4 codes per call, and runs the Pallas kernels (implicit
-    and materializing alike) with int8 operands and **int32
-    accumulation**, dequantizing in the fused flush epilogue — no f32
-    fake-quant fallback on the bound path. Because the integer
-    arithmetic is exact (and the f32 QAT reference accumulates sub-2^24
-    code multiples, also exact), the exec matches a ``cfg.quantized``
-    dense forward bit-for-bit. ``quant_spec`` overrides the static
-    formats with a custom :class:`repro.core.quant.QuantSpec` (e.g.
-    per-layer calibrated activation scales).
-    ``implicit``: bind the implicit-im2col kernel (``None`` = auto — on
-    whenever the layout's K axis is channel-major, i.e. both FPGA
-    layouts) so the im2col patch matrix is never materialized in HBM;
-    ``False`` forces the materializing path (the parity oracle).
-    ``bm``: M-blocking policy, ``"auto"`` (adaptive per layer/batch) or a
-    fixed int (the PR-3 contract).
-
-    Host-side: requires concrete weights (plans are numpy; raises under
-    jit — prebuild and pass the exec in); the bound kernels are jitted.
-    The exec is pinned to these exact weight arrays — ``apply`` rejects a
-    concrete params tree whose conv leaves differ (rebind after updates).
-    """
-    from ..sparse.conv_plan import make_sparse_conv
-
-    if quant_spec is not None and not quantized:
-        raise ValueError("quant_spec without quantized=True would be "
-                         "silently ignored — pass quantized=True")
-    qspec = (quant_spec or Q.QuantSpec()) if quantized else None
-
-    def bind_one(keys, w, layout, gm, plan, leaf):
-        # quantized: bind the RAW weight — the quant spec emits the codes
-        # itself, and a calibrated spec must not see values pre-clipped to
-        # the static Q2.5 grid (for the static spec the two are identical:
-        # round(fake_quant(w)·2^5) == round(w·2^5))
-        return (None if plan.density >= dense_fallback
-                else make_sparse_conv(layout, gm, bm=bm,
-                                      weight=leaf if quantized else w,
-                                      implicit=implicit, quant=qspec))
-
-    table, plans, layouts, gms, bound = _bind_conv_layers(
-        params, specs, group_masks, n_cu, packed,
-        (lambda l: Q.quantize(l, Q.Q2_5)) if quantized else (lambda l: l),
-        bind_one)
-    exec_implicit = _resolve_exec_implicit(implicit, layouts)
-    return SparseConvExec(table=table, plans=plans, n_cu=n_cu,
-                          layouts=layouts, group_masks_np=gms,
-                          quantized=quantized, bound_weights=bound,
-                          implicit=exec_implicit, bm=bm)
+    Kept as a thin wrapper (parity-tested in ``tests/test_exec_cache.py``)
+    so no call site silently changes behavior; note its legacy default is
+    ``packed=False`` where :class:`ExecSpec` defaults to the production
+    ``packed=True``."""
+    warnings.warn(
+        "build_sparse_execution is deprecated — use "
+        "bind_execution(params, spec=ExecSpec(...))",
+        DeprecationWarning, stacklevel=2)
+    return bind_execution(
+        params,
+        spec=ExecSpec(packed=packed, quantized=quantized, folded=False,
+                      implicit=implicit, bm=bm, n_cu=n_cu,
+                      dense_fallback=dense_fallback),
+        specs=specs, group_masks=group_masks, quant_spec=quant_spec)
 
 
 def build_sparse_inference(
@@ -469,53 +692,40 @@ def build_sparse_inference(
     quantized: bool = False,
     implicit: Optional[bool] = True,
 ) -> SparseConvExec:
-    """Bind BN-folded conv layers (``fold_batchnorm`` output: per-conv
-    ``{"w", "b"}``) to the kernel with the *fused epilogue*: bias add and —
-    where the network applies ReLU directly after BN (conv0 and every
-    block's conv1) — ReLU happen at the kernel's flush step, so folded-BN
-    inference runs entirely inside the kernel. conv2/proj outputs feed the
-    residual add first, so only their bias is fused. Defaults to the
-    packed (MXU-shaped) layout with the **implicit-im2col** kernel
-    (``implicit=True``: windows gathered from the NHWC activation
-    in-kernel, no patch matrix in HBM, adaptive ``bm="auto"`` M-blocking;
-    ``implicit=False`` keeps the materializing oracle).
-
-    ``quantized=True``: fixed-point folded inference — BN folding scales
-    each output channel arbitrarily, so the static Q2.5 grid would clip;
-    each layer instead gets **per-cout calibrated** weight scales
-    (``QuantSpec.calibrate``: the channel's absmax maps to ±127) with
-    static Q3.4 activation codes, and the kernel flush runs the full
-    dequant → bias → ReLU epilogue on the int32 accumulator. Accurate to
-    activation-quantization tolerance vs the float folded path (weights
-    carry ~7 bits/channel). Consume with :func:`apply_folded`.
-    """
-    from ..sparse.conv_plan import make_sparse_conv
-
-    conv_params = {k: v for k, v in folded.items() if k != "fc"}
-
-    def bind_one(keys, w, layout, gm, plan, leaf):
-        if plan.density >= dense_fallback:
-            return None
-        bias = _get_path(folded, keys[:-1])["b"]
-        relu = keys[-2] in ("conv0", "conv1")   # ReLU directly after BN
-        quant = Q.QuantSpec.calibrate(w) if quantized else None
-        return make_sparse_conv(layout, gm, bm=bm, weight=w, bias=bias,
-                                relu=relu, implicit=implicit, quant=quant)
-
-    table, plans, layouts, gms, bound = _bind_conv_layers(
-        conv_params, specs, group_masks, n_cu, packed, lambda l: l, bind_one)
-    exec_implicit = _resolve_exec_implicit(implicit, layouts)
-    return SparseConvExec(table=table, plans=plans, n_cu=n_cu,
-                          layouts=layouts, group_masks_np=gms, folded=True,
-                          quantized=quantized, bound_weights=bound,
-                          implicit=exec_implicit, bm=bm)
+    """Deprecated: use ``bind_execution(folded, cfg,
+    spec=ExecSpec(folded=True, ...))``. Thin wrapper, parity-tested."""
+    warnings.warn(
+        "build_sparse_inference is deprecated — use "
+        "bind_execution(folded, cfg, spec=ExecSpec(folded=True, ...))",
+        DeprecationWarning, stacklevel=2)
+    return bind_execution(
+        folded, cfg,
+        spec=ExecSpec(packed=packed, quantized=quantized, folded=True,
+                      implicit=implicit, bm=bm, n_cu=n_cu,
+                      dense_fallback=dense_fallback),
+        specs=specs, group_masks=group_masks)
 
 
 # sparse=True builds are memoized on params identity: the cache holds a
 # strong reference to the keyed params tree, which pins its id() for the
-# lifetime of the entry (bounded — oldest evicted first).
-_SPARSE_EXEC_CACHE: "dict[tuple, tuple]" = {}
+# lifetime of the entry. A true LRU (a repeat hit moves its entry to the
+# back; the least-recently-USED entry is evicted, not merely the oldest
+# insert) with an explicit, configurable bound — a long-lived serving
+# process alternating between a few models keeps all of them hot without
+# pinning every historical params tree.
+_SPARSE_EXEC_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
 _SPARSE_EXEC_CACHE_MAX = 4
+
+
+def set_sparse_exec_cache_capacity(n: int) -> None:
+    """Set the ``apply(..., sparse=True)`` memo bound (entries, >= 1),
+    evicting least-recently-used entries immediately if over the new cap."""
+    global _SPARSE_EXEC_CACHE_MAX
+    if n < 1:
+        raise ValueError(f"capacity must be >= 1, got {n}")
+    _SPARSE_EXEC_CACHE_MAX = n
+    while len(_SPARSE_EXEC_CACHE) > _SPARSE_EXEC_CACHE_MAX:
+        _SPARSE_EXEC_CACHE.popitem(last=False)
 
 
 def _resolve_sparse(sparse, params, quantized: bool = False) -> Optional[SparseConvExec]:
@@ -525,10 +735,15 @@ def _resolve_sparse(sparse, params, quantized: bool = False) -> Optional[SparseC
         key = (id(params), quantized)
         hit = _SPARSE_EXEC_CACHE.get(key)
         if hit is not None and hit[0] is params:
+            _SPARSE_EXEC_CACHE.move_to_end(key)
             return hit[1]
-        exec_ = build_sparse_execution(params, quantized=quantized)
+        # legacy packed=False layout preserved for the memoized path —
+        # its grid-step accounting is what tests/benches pin down
+        exec_ = bind_execution(
+            params, spec=ExecSpec(packed=False, quantized=quantized,
+                                  implicit=None))
         while len(_SPARSE_EXEC_CACHE) >= _SPARSE_EXEC_CACHE_MAX:
-            _SPARSE_EXEC_CACHE.pop(next(iter(_SPARSE_EXEC_CACHE)))
+            _SPARSE_EXEC_CACHE.popitem(last=False)
         _SPARSE_EXEC_CACHE[key] = (params, exec_)
         return exec_
     if isinstance(sparse, SparseConvExec):
@@ -540,8 +755,8 @@ def _resolve_sparse(sparse, params, quantized: bool = False) -> Optional[SparseC
         if sparse.quantized != quantized:
             raise ValueError(
                 f"SparseConvExec prepacked with quantized={sparse.quantized} "
-                f"but cfg.quantized={quantized} — rebuild with "
-                f"build_sparse_execution(..., quantized={quantized})")
+                f"but cfg.quantized={quantized} — rebind with "
+                f"bind_execution(..., spec=ExecSpec(quantized={quantized}))")
         # staleness guard: the exec's convs compute with the weights packed
         # at bind time, so a concrete params tree with different conv leaves
         # would silently be ignored. (Tracers — the jitted path — can't be

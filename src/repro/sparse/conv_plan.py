@@ -61,6 +61,42 @@ def _ceil_to(n: int, m: int) -> int:
     return -(-n // m) * m
 
 
+def mask_fingerprint(group_masks) -> str:
+    """Stable hex digest of a per-layer group-mask collection — the
+    sparsity-pattern component of the serving exec-cache key
+    (:mod:`repro.launch.exec_cache`). Two mask sets fingerprint equal iff
+    every layer has the same live/pruned pattern; any HAPM epoch that
+    prunes (or revives) a group changes the digest, which is what
+    invalidates cached binds.
+
+    Accepts either a ``{path-tuple: mask}`` dict (e.g.
+    ``SparseConvExec.group_masks_np``) or an arbitrary pytree of masks
+    (e.g. ``HAPMState.group_masks``); entries are digested in sorted path
+    order so dict insertion order is irrelevant. Masks are binarized
+    (``> 0``) before hashing — only the live/pruned pattern matters, not
+    score values.
+    """
+    import hashlib
+
+    import jax
+
+    if isinstance(group_masks, dict) and all(
+            isinstance(k, tuple) for k in group_masks):
+        items = sorted(("/".join(map(str, k)), v)
+                       for k, v in group_masks.items())
+    else:
+        leaves = jax.tree_util.tree_flatten_with_path(group_masks)[0]
+        items = sorted((jax.tree_util.keystr(path), leaf)
+                       for path, leaf in leaves)
+    h = hashlib.sha1()
+    for name, mask in items:
+        m = np.asarray(mask)
+        h.update(name.encode())
+        h.update(str(m.size).encode())
+        h.update(np.packbits(m > 0).tobytes())
+    return h.hexdigest()
+
+
 @dataclasses.dataclass(frozen=True)
 class ConvGemmLayout:
     """Packing of one conv weight onto the block-sparse kernel's tile grid."""
