@@ -112,6 +112,7 @@ def run(args=None) -> dict:
     qcfg = dataclasses.replace(cfg, quantized=True)
     dense_qat_apply = jax.jit(lambda p, s, xx: cnn.apply(p, s, xx, qcfg))
     rows = []
+    st50 = None
     print(f"\n{'target':>7} {'impl exec/dense':>16} {'dsb':>6} "
           f"{'dense ms':>9} {'impl ms':>8} {'mat ms':>7} {'kern x':>7} "
           f"{'hbm x':>6} {'q ms':>7} {'q hbm x':>8} {'util b1':>8} "
@@ -122,6 +123,8 @@ def run(args=None) -> dict:
         if target > 0:
             st = hapm_epoch_update(st, specs, params, hcfg)
         pruned = apply_masks(params, hapm_element_masks(specs, st))
+        if target == 0.5:
+            st50, pruned50 = st, pruned
 
         # one bind per execution contract per sparsity level, reused for
         # step accounting AND timing (weights prepacked at bind time) —
@@ -353,6 +356,50 @@ def run(args=None) -> dict:
     # row == 0.0); vs the f32 reference only quantization noise remains
     assert all(r["quantized_max_err_vs_qat"] == 0.0 for r in rows)
     assert at50["quantized_max_err_vs_f32"] <= 1.0, at50
+
+    # ---- training through the kernels at the 50 % operating point -------
+    # one SGD-style fwd+bwd step, dense lax.conv vs the trainable sparse
+    # bind (custom VJP through the block-sparse kernels). Grad parity is
+    # the acceptance claim; the wall-clock ratio is recorded for the
+    # baseline gate (on CPU the sparse step runs the kernels in interpret
+    # mode, so the ratio is hardware-meaningful only on TPU — same caveat
+    # as every wall column above).
+    masks50 = hapm_element_masks(specs, st50)
+    texec = cnn.bind_execution(pruned50, cfg,
+                               spec=cnn.ExecSpec(n_cu=n_cu, trainable=True),
+                               specs=specs, group_masks=st50.group_masks)
+    y = jax.random.randint(jax.random.PRNGKey(2), (batch,), 0, cfg.num_classes)
+
+    def _step(sparse):
+        def loss(p):
+            logits, _ = cnn.apply(apply_masks(p, masks50), state, x, cfg,
+                                  train=True, sparse=sparse)
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(lp, y[:, None], axis=-1))
+        return jax.jit(lambda p: jax.value_and_grad(loss)(p))
+
+    (ld, gd), t_train_dense = _timed(_step(None), pruned50, reps=3)
+    (ls, gs), t_train_sparse = _timed(_step(texec), pruned50, reps=3)
+    grad_err = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                   zip(jax.tree.leaves(gd), jax.tree.leaves(gs)))
+    pruned_grad = max(
+        float(jnp.max(jnp.abs(g * (1 - m)))) if m is not None else 0.0
+        for g, m in zip(jax.tree.leaves(gs),
+                        jax.tree.leaves(masks50, is_leaf=lambda v: v is None)))
+    at50.update({
+        "train_step_dense_ms": t_train_dense * 1e3,
+        "train_step_sparse_ms": t_train_sparse * 1e3,
+        "train_step_sparse_vs_dense_ratio": t_train_sparse / t_train_dense,
+        "grad_parity_max_err": grad_err,
+        "pruned_group_grad_max": pruned_grad,
+    })
+    print(f"\ntrain step @50%: dense {t_train_dense*1e3:.2f} ms, sparse "
+          f"{t_train_sparse*1e3:.2f} ms "
+          f"({at50['train_step_sparse_vs_dense_ratio']:.2f}x), "
+          f"grad parity {grad_err:.2e}, pruned-group grad {pruned_grad:.2e}")
+    assert grad_err <= 1e-4, f"gradient parity broke: {grad_err}"
+    assert pruned_grad == 0.0, "pruned groups must get exactly-zero gradients"
+    assert abs(float(ld) - float(ls)) <= 1e-5
 
     out = {"config": {"n_cu": n_cu, "batch": batch, "fast": fast,
                       "stages": cfg.stages, "widths": cfg.widths,

@@ -20,6 +20,15 @@ cache hit-rate must be exactly 1.0 (any miss after warmup means the
 cache key or invalidation is broken, not that the machine is slow) and
 the bind-amortization ratio must clear the acceptance floor of 5x (a
 machine-speed-cancelling ratio of two walls on the same process).
+
+With ``--require-training`` the bench's training columns (the 50 % row's
+``train_step_*`` / ``grad_parity_max_err`` / ``pruned_group_grad_max``)
+are additionally gated: gradient parity vs the dense path is an absolute
+contract (≤ 1e-4; the custom VJP either reproduces the masked-loss
+gradients or it is wrong), pruned-group gradients must be *exactly* zero
+(the HAPM no-resurrection invariant holds bitwise by construction), and
+the sparse-vs-dense train-step wall ratio is gated against the baseline
+with ``WALL_SLACK`` headroom like every timing ratio.
 """
 from __future__ import annotations
 
@@ -67,6 +76,10 @@ WALL_SLACK = 0.7
 # drift at ulp level across BLAS/XLA builds
 ERR_KEYS = {"quantized_max_err_vs_f32"}
 ERR_SLACK = 1.5
+# training gates: absolute contracts (baseline-free) + one timing ratio
+TRAIN_GRAD_PARITY_MAX = 1e-4        # dense-vs-sparse gradient max |err|
+TRAIN_PRUNED_GRAD_MAX = 0.0         # no-resurrection: exactly zero
+TRAIN_RATIO_KEY = "train_step_sparse_vs_dense_ratio"
 
 
 def _row_at(report: dict, target: float) -> dict:
@@ -94,6 +107,35 @@ def check_serving() -> list:
     return failures
 
 
+def check_training(row: dict, baseline: dict) -> list:
+    """Gate the 50 %-row training columns; returns failures."""
+    failures = []
+    for key, ceil in (("grad_parity_max_err", TRAIN_GRAD_PARITY_MAX),
+                      ("pruned_group_grad_max", TRAIN_PRUNED_GRAD_MAX)):
+        cur = row.get(key)
+        bad = cur is None or cur > ceil + TOL
+        print(f"  {key:>44}: {cur if cur is not None else 'MISSING'} "
+              f"(ceiling {ceil}) {'REGRESSED' if bad else 'ok'}")
+        if bad:
+            failures.append(key)
+    cur = row.get(TRAIN_RATIO_KEY)
+    base = baseline.get("gates", {}).get(TRAIN_RATIO_KEY)
+    if cur is None:
+        print(f"  {TRAIN_RATIO_KEY:>44}: MISSING (rerun the bench) REGRESSED")
+        failures.append(TRAIN_RATIO_KEY)
+    elif base is not None:
+        # smaller is better; allow the same timing headroom as WALL_KEYS
+        bad = cur > base / WALL_SLACK + TOL
+        print(f"  {TRAIN_RATIO_KEY:>44}: {cur:.6f} (baseline {base:.6f}, "
+              f"max, slack 1/{WALL_SLACK}) {'REGRESSED' if bad else 'ok'}")
+        if bad:
+            failures.append(TRAIN_RATIO_KEY)
+    else:
+        print(f"  {TRAIN_RATIO_KEY:>44}: {cur:.6f} (no baseline — refresh "
+              f"with --update) ok")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--update", action="store_true",
@@ -101,6 +143,9 @@ def main(argv=None) -> int:
     ap.add_argument("--require-serving", action="store_true",
                     help="also gate BENCH_serving_cnn.json (hit-rate, "
                          "bind amortization)")
+    ap.add_argument("--require-training", action="store_true",
+                    help="also gate the bench's training columns (grad "
+                         "parity, pruned-group grads, train-step ratio)")
     args = ap.parse_args(argv)
 
     with open(BENCH_JSON) as f:
@@ -108,8 +153,11 @@ def main(argv=None) -> int:
     row = _row_at(report, TARGET)
 
     if args.update:
+        gates = {k: row[k] for k in GATES}
+        if TRAIN_RATIO_KEY in row:
+            gates[TRAIN_RATIO_KEY] = row[TRAIN_RATIO_KEY]
         baseline = {"config": report["config"], "target_group_sparsity": TARGET,
-                    "gates": {k: row[k] for k in GATES}}
+                    "gates": gates}
         with open(BASELINE_JSON, "w") as f:
             json.dump(baseline, f, indent=2)
         print(f"wrote {BASELINE_JSON}: {baseline['gates']}")
@@ -145,6 +193,8 @@ def main(argv=None) -> int:
             failures.append(key)
     if args.require_serving:
         failures += check_serving()
+    if args.require_training:
+        failures += check_training(row, baseline)
     if failures:
         print(f"\nexecuted-sparsity regression at {TARGET:.0%} group "
               f"sparsity: {failures}", file=sys.stderr)

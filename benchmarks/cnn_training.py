@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Optional
 
 import jax
@@ -37,8 +38,9 @@ class TrainedModel:
     test_accuracy: float
 
 
-def _loss_fn(params, state, batch, cfg):
-    logits, new_state = cnn.apply(params, state, batch["x"], cfg, train=True)
+def _loss_fn(params, state, batch, cfg, sparse=None):
+    logits, new_state = cnn.apply(params, state, batch["x"], cfg, train=True,
+                                  sparse=sparse)
     logp = jax.nn.log_softmax(logits)
     nll = -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], axis=-1))
     return nll, new_state
@@ -53,6 +55,30 @@ def _train_step(params, state, opt_state, masks, batch, lr, cfg):
     updates, opt_state = opt_update(grads, opt_state, params, lr)
     params = apply_masks(apply_updates(params, updates), masks)
     return params, new_state, opt_state, loss
+
+
+def make_sparse_train_step(cfg, sparse):
+    """Jitted SGD step running fwd+bwd through a ``trainable=True`` sparse
+    bind (the Pallas block-sparse kernels with their custom VJP). The exec
+    is closed over — it is not hashable, and it changes every HAPM epoch
+    anyway, so each rebind gets its own jitted step. Identical update rule
+    to :func:`_train_step`; pruned groups receive exactly-zero gradients
+    from the kernel backward, and the mask re-application after the update
+    keeps the optimizer's momentum from resurrecting them."""
+    assert getattr(sparse, "trainable", False), (
+        "sparse training needs a bind with ExecSpec(trainable=True)")
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+    def step(params, state, opt_state, masks, batch, lr):
+        mp = apply_masks(params, masks)
+        (loss, new_state), grads = jax.value_and_grad(_loss_fn, has_aux=True)(
+            mp, state, batch, cfg, sparse)
+        opt_init, opt_update = sgd(momentum=0.9, weight_decay=1e-4)
+        updates, opt_state = opt_update(grads, opt_state, params, lr)
+        params = apply_masks(apply_updates(params, updates), masks)
+        return params, new_state, opt_state, loss
+
+    return step
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -81,9 +107,13 @@ def train_variant(
     n_cu: int = 12,
     uniform_sparsity: float = 0.8,
     hapm_sparsity: float = 0.5,
+    sparse_training: bool = False,
     verbose: bool = True,
 ) -> TrainedModel:
     assert variant in ("fp32", "int8", "uniform", "hapm")
+    assert not (sparse_training and variant != "hapm"), (
+        "sparse_training executes the HAPM group plan; other variants "
+        "have no group masks to bind")
     cfg = cnn.ResNetConfig(quantized=(variant != "fp32"))
     if init_from is not None:
         # deep-copy: the jitted step donates its inputs, and a TrainedModel
@@ -110,24 +140,43 @@ def train_variant(
     history = []
     step = 0
     for epoch in range(epochs):
+        sparse_step = None
         if variant == "hapm":
             hstate = hapm_epoch_update(hstate, specs, params, hcfg)
             masks = hapm_element_masks(specs, hstate)
+            if sparse_training and hstate.groups_pruned > 0:
+                # the pattern just moved: rebind (plan + custom-vjp conv
+                # closures) once per epoch, jit one step against it — all
+                # later steps this epoch reuse the trace. No weights are
+                # prepacked by a trainable bind, so the mid-epoch weight
+                # updates can never go stale.
+                exec_ = cnn.bind_execution(
+                    params, cfg,
+                    spec=cnn.ExecSpec(n_cu=n_cu, trainable=True),
+                    specs=specs, group_masks=hstate.group_masks)
+                sparse_step = make_sparse_train_step(cfg, exec_)
         losses = []
+        t0 = time.time()
         for x, y in ds.epoch(batch, seed=epoch + 1):
             if variant == "uniform":
                 masks = maybe_update(step, apply_masks(params, masks), masks, ucfg)
             b = {"x": jnp.asarray(x), "y": jnp.asarray(y)}
-            params, state, opt_state, loss = _train_step(
-                params, state, opt_state, masks, b, sched.lr, cfg)
+            if sparse_step is not None:
+                params, state, opt_state, loss = sparse_step(
+                    params, state, opt_state, masks, b, sched.lr)
+            else:
+                params, state, opt_state, loss = _train_step(
+                    params, state, opt_state, masks, b, sched.lr, cfg)
             losses.append(float(loss))
             step += 1
+        epoch_s = time.time() - t0
         mean_loss = float(np.mean(losses))
         sched.step(mean_loss)
         history.append(mean_loss)
         if verbose:
+            path = "sparse-exec" if sparse_step is not None else "dense"
             print(f"  [{variant}] epoch {epoch + 1}/{epochs}: loss={mean_loss:.4f} "
-                  f"lr={sched.lr:.4f}")
+                  f"lr={sched.lr:.4f} [{path} {epoch_s:.1f}s]")
 
     params = apply_masks(params, masks)
     acc = evaluate(params, state, cfg, ds)

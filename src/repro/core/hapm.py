@@ -106,6 +106,15 @@ def hapm_epoch_update(
         sc = np.asarray(sc, np.float64)
         if config.score == "mean_abs":
             sc = sc / np.maximum(spec.group_elem_counts(), 1)
+        if not np.isfinite(sc).all():
+            # NaN sorts *after* np.inf, so a diverged layer's groups would
+            # silently become unprunable (the selection loop breaks at the
+            # first non-finite score) — fail loudly instead
+            bad = int(np.count_nonzero(~np.isfinite(sc)))
+            raise ValueError(
+                f"hapm_epoch_update: layer {li} has {bad} non-finite group "
+                f"score(s) — the model diverged; scores must be finite for "
+                f"global ranking")
         sc = np.where(np.asarray(m) > 0, sc, np.inf)  # already-pruned: never re-selected
         pooled.append(sc)
         owner.append(np.full(sc.shape, li, np.int32))

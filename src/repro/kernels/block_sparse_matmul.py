@@ -163,3 +163,72 @@ def block_sparse_matmul(
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(*inputs)
+
+
+def _grad_w_kernel(kk_ref, nn_ref, x_ref, g_ref, o_ref, acc_ref):
+    m = pl.program_id(1)
+
+    @pl.when(m == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], g_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(m == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bm", "interpret"))
+def block_sparse_grad_weight(
+    x: jnp.ndarray,            # (M, K) f32/bf16 packed patches
+    g: jnp.ndarray,            # (M, N) f32/bf16 packed output gradient
+    kk: jnp.ndarray,           # (L,) int32 live-tile K coordinates
+    nn: jnp.ndarray,           # (L,) int32 live-tile N coordinates
+    *,
+    block: Tuple[int, int] = (128, 128),
+    bm: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """``dW = x^T @ g`` restricted to the live weight tiles — the backward
+    twin of :func:`block_sparse_matmul`.
+
+    Grid ``(L, M/bm)``: program ``(l, m)`` contracts the ``m``-th row block
+    of ``x[:, kk[l]-tile]`` against ``g[:, nn[l]-tile]`` into a VMEM
+    accumulator, flushed on the last row block. ``(kk, nn)`` are the
+    scalar-prefetched live-tile coordinates (any order), so dead tiles cost
+    neither MXU cycles nor HBM→VMEM DMA — same dispatch economics as the
+    forward. Returns the **compact** ``(L, bk, bn)`` f32 stack of live dW
+    tiles; the caller scatters it onto the full ``(K, N)`` grid, leaving
+    pruned tiles exactly zero (HAPM's no-resurrection invariant holds by
+    construction, not by masking a dense product).
+    """
+    M, K = x.shape
+    Mg, N = g.shape
+    bk, bn = block
+    L = int(kk.shape[0])
+    assert Mg == M and M % bm == 0 and K % bk == 0 and N % bn == 0, (
+        f"shapes must be tile-aligned: {x.shape}, {g.shape}, "
+        f"block={block}, bm={bm}")
+    assert L > 0, "no live tiles — the caller short-circuits to zeros"
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(L, M // bm),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda l, m, kk, nn: (m, kk[l])),
+            pl.BlockSpec((bm, bn), lambda l, m, kk, nn: (m, nn[l])),
+        ],
+        out_specs=pl.BlockSpec((1, bk, bn), lambda l, m, kk, nn: (l, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _grad_w_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((L, bk, bn), jnp.float32),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(kk, nn, x, g)

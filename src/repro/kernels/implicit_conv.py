@@ -37,6 +37,16 @@ Q2.5 coefficients): the in-VMEM gather is dtype-agnostic, accumulation
 switches to exact int32, and the flush epilogue dequantizes through a
 per-cout ``scale`` row before bias/ReLU — one byte per operand element
 moved instead of four, on exactly the same grid and index table.
+
+Differentiation: :func:`implicit_block_sparse_conv` itself has no JVP
+(Pallas calls are opaque to AD) — the ``custom_vjp`` lives one level up,
+in ``sparse.conv_plan.make_sparse_conv(trainable=True)``, whose primal
+dispatches this kernel and whose backward runs the **transposed-plan**
+``block_sparse_matmul`` for dX and the live-tile
+``block_sparse_grad_weight`` for dW on the materialized patch layout
+(the implicit gather is a forward data-movement optimization; the
+backward's operands — packed dY and packed patches — have no windowed
+structure to exploit).
 """
 from __future__ import annotations
 

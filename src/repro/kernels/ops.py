@@ -14,8 +14,7 @@ import numpy as np
 
 from ..core import quant as Q
 from ..sparse.block_mask import BlockSparsePlan, plan_from_tile_mask, transpose_plan
-from . import ref
-from .block_sparse_matmul import block_sparse_matmul
+from .block_sparse_matmul import block_sparse_grad_weight, block_sparse_matmul
 from .int8_matmul import int8_matmul
 
 
@@ -31,6 +30,35 @@ def _pad_rows(x2d: jnp.ndarray, bm: int):
     return x2d, M
 
 
+def make_block_sparse_grad_weight(tile_mask: np.ndarray,
+                                  block: Tuple[int, int], *, bm: int = 128):
+    """Build ``dw_fn(x2d, g2d) -> x2d^T @ g2d`` on the live tiles of
+    ``tile_mask`` only (``kernels.block_sparse_grad_weight``), scattered
+    back onto the full packed ``(K, N)`` grid with pruned tiles *exactly*
+    zero — the dW half of every block-sparse backward. Rows of ``x2d`` /
+    ``g2d`` are zero-padded to the ``bm`` multiple (zero rows contribute
+    nothing to the product)."""
+    tm = np.asarray(tile_mask)
+    live = np.argwhere(tm)
+    nKb, nNb = tm.shape
+    bk, bn = block
+    kk = jnp.asarray(live[:, 0], jnp.int32)
+    nn = jnp.asarray(live[:, 1], jnp.int32)
+
+    def dw_fn(x2d, g2d):
+        if live.shape[0] == 0:
+            return jnp.zeros((nKb * bk, nNb * bn), jnp.float32)
+        xp, _ = _pad_rows(x2d.astype(jnp.float32), bm)
+        gp, _ = _pad_rows(g2d.astype(jnp.float32), bm)
+        compact = block_sparse_grad_weight(xp, gp, kk, nn, block=(bk, bn),
+                                           bm=bm, interpret=_interpret())
+        dw = jnp.zeros((nKb, nNb, bk, bn), compact.dtype)
+        dw = dw.at[live[:, 0], live[:, 1]].set(compact)
+        return dw.transpose(0, 2, 1, 3).reshape(nKb * bk, nNb * bn)
+
+    return dw_fn
+
+
 def make_block_sparse_matmul(plan: BlockSparsePlan, tile_mask: np.ndarray, *,
                              bm: int = 128, bias=None, relu: bool = False,
                              scale=None):
@@ -39,7 +67,8 @@ def make_block_sparse_matmul(plan: BlockSparsePlan, tile_mask: np.ndarray, *,
     The plan is static (recompiled when HAPM prunes more groups — an
     epoch-boundary event). Backward:
       dx = dy @ (w ⊙ m)^T   — block-sparse with the transposed plan
-      dw = (x^T dy) ⊙ m     — dense then tile-masked (dw is dense anyway)
+      dw = x^T dy           — live tiles only (``block_sparse_grad_weight``),
+                              pruned tiles exactly zero by construction
 
     ``bias`` (a length-N vector in the *packed* column layout) and/or
     ``relu`` fuse the inference epilogue into the kernel's flush step;
@@ -68,7 +97,7 @@ def make_block_sparse_matmul(plan: BlockSparsePlan, tile_mask: np.ndarray, *,
 
     t_plan = transpose_plan(plan, tile_mask)
     t_idx, t_cnt = jnp.asarray(t_plan.idx), jnp.asarray(t_plan.cnt)
-    tmask = jnp.asarray(tile_mask)
+    dw_fn = make_block_sparse_grad_weight(tile_mask, block, bm=bm)
 
     def _fwd2d(x2d, w):
         xp, M = _pad_rows(x2d, bm)
@@ -93,8 +122,7 @@ def make_block_sparse_matmul(plan: BlockSparsePlan, tile_mask: np.ndarray, *,
         dx = block_sparse_matmul(gp, jnp.swapaxes(w, 0, 1), t_idx, t_cnt,
                                  block=t_plan.block, bm=bm, interpret=_interpret())[:M]
         x2d = x.reshape(-1, x.shape[-1])
-        dw = jnp.dot(x2d.T.astype(jnp.float32), g2d.astype(jnp.float32))
-        dw = (dw * ref.expand_tile_mask(tmask, block, w.shape[0], w.shape[1])).astype(w.dtype)
+        dw = dw_fn(x2d, g2d).astype(w.dtype)
         return dx.reshape(x.shape).astype(x.dtype), dw
 
     f.defvjp(f_fwd, f_bwd)

@@ -90,10 +90,16 @@ class CnnServer:
         no bind happens until the next request. Entries survive only when
         nothing changed at all (same arrays, same pattern): a bind is
         pinned to its exact weight arrays, so same-pattern-new-values
-        still rebinds. Returns the number of entries invalidated."""
-        old_leaves = jax.tree_util.tree_leaves(self._tree)
+        still rebinds. Returns the number of entries invalidated.
+
+        The no-op check compares the *installed* ``params``/``state``
+        leaves, not the derived tree: on a folded server ``_install``
+        re-runs ``fold_batchnorm``, which allocates fresh arrays every
+        call, so an identity comparison on the folded tree would read
+        every no-op update as a change and flush the whole cache."""
+        old_leaves = jax.tree_util.tree_leaves((self.params, self.state))
         self._install(params, self.state if state is None else state)
-        new_leaves = jax.tree_util.tree_leaves(self._tree)
+        new_leaves = jax.tree_util.tree_leaves((self.params, self.state))
         unchanged = (len(old_leaves) == len(new_leaves) and
                      all(a is b for a, b in zip(old_leaves, new_leaves)))
         return self.cache.invalidate(
@@ -139,6 +145,10 @@ class CnnServer:
         bit-identical to an unbucketed forward (per-image independence)."""
         images = jnp.asarray(images)
         n, out = images.shape[0], []
+        if n == 0:
+            # the chunk loop never runs — answer the degenerate request
+            # with an empty logits array instead of IndexError on out[0]
+            return jnp.zeros((0, self.cfg.num_classes), jnp.float32)
         max_b = self.buckets[-1]
         for lo in range(0, n, max_b):
             chunk = images[lo:lo + max_b]
@@ -169,24 +179,32 @@ def simulate_trace(batcher: BucketBatcher,
     """Virtual-clock queueing simulation: drive ``batcher`` with an
     arrival trace (``(t_seconds, n_images)`` per request) and a measured
     per-bucket service time (``service_time_s(bucket) -> s``), with no
-    wall-clock sleeps. Request latency = (release - arrival) + service
-    time of the released bucket. Returns p50/p99 latency, per-bucket
-    release counts, and mean bucket fill (released images / bucket
-    capacity) — the number the max-wait deadline is tuning."""
+    wall-clock sleeps. Each arrival is submitted as one (possibly
+    multi-image) batcher request, matching :class:`CnnServer` semantics.
+    Request latency = (release - arrival) + service time of the released
+    bucket. Returns p50/p99 request latency, per-bucket release counts,
+    total requests/images, and mean bucket fill (released images /
+    released bucket capacity) — the number the max-wait deadline is
+    tuning. Fill counts *images*, not requests: a released (bucket=4,
+    one 4-image request) batch is full, not quarter-full."""
     submit_t: Dict[int, float] = {}
+    sizes: Dict[int, int] = {}
     latency: List[float] = []
     releases: Dict[int, int] = {}
-    fill_img = fill_cap = 0
+    fill_img = fill_cap = images = 0
 
     def record(now: float, batches) -> None:
         nonlocal fill_img, fill_cap
         for bucket, ids in batches:
             done = now + service_time_s(bucket)
             releases[bucket] = releases.get(bucket, 0) + 1
-            fill_cap += bucket
+            imgs = sum(sizes.pop(rid) for rid in ids)
+            # a head request bigger than every bucket is released alone;
+            # the server chunks it across ceil(n/bucket) max-bucket calls
+            fill_cap += max(bucket, -(-imgs // bucket) * bucket)
+            fill_img += imgs
             for rid in ids:
                 latency.append(done - submit_t.pop(rid))
-            fill_img += len(ids)   # single-image requests: ids == images
 
     for t, n in sorted(arrivals):
         # fire deadline flushes that elapse before this arrival
@@ -197,8 +215,9 @@ def simulate_trace(batcher: BucketBatcher,
             # polling at exactly the deadline can miss it in floating
             # point ((t_submit + w) - t_submit < w); force the drain then
             record(t_dl, batcher.poll(t_dl) or batcher.poll(t_dl, flush=True))
-        for _ in range(n):       # one batcher request per image
-            submit_t[batcher.submit(1, t)] = t
+        rid = batcher.submit(n, t)
+        submit_t[rid], sizes[rid] = t, n
+        images += n
         record(t, batcher.poll(t))
     t_end = (max(p.t_submit for p in batcher._pending) + batcher.max_wait_s
              if len(batcher) else (sorted(arrivals)[-1][0] if arrivals else 0))
@@ -206,6 +225,7 @@ def simulate_trace(batcher: BucketBatcher,
 
     lat = np.asarray(sorted(latency)) if latency else np.zeros(1)
     return {"requests": len(latency),
+            "images": images,
             "p50_s": float(np.percentile(lat, 50)),
             "p99_s": float(np.percentile(lat, 99)),
             "releases": {str(k): v for k, v in sorted(releases.items())},

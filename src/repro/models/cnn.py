@@ -51,9 +51,25 @@ def _bn_state_init(c):
     return {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
 
 
+def _init_key_count(cfg: ResNetConfig) -> int:
+    """Keys :func:`init` consumes: conv0, every block's convs (2, +1 with a
+    projection shortcut), and the fc head."""
+    n, cin = 2, cfg.widths[0]                    # conv0 + fc
+    for si, (n_blocks, width) in enumerate(zip(cfg.stages, cfg.widths)):
+        for bi in range(n_blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            n += 3 if (stride != 1 or cin != width) else 2
+            cin = width
+    return n
+
+
 def init(key: jax.Array, cfg: ResNetConfig) -> Tuple[PyTree, PyTree]:
     """Returns (params, state). state holds BN running stats."""
-    keys = iter(jax.random.split(key, 64))
+    # split sized to the layers this config actually has — a fixed split
+    # count would StopIteration on deep configs (and waste keys on small
+    # ones). NOTE: jax.random.split(key, n)[i] depends on n, so resizing
+    # the split intentionally re-seeds all init streams per config.
+    keys = iter(jax.random.split(key, _init_key_count(cfg)))
     params: dict = {"conv0": {"w": _conv_init(next(keys), 3, 3, cfg.in_channels, cfg.widths[0])},
                     "bn0": _bn_init(cfg.widths[0])}
     state: dict = {"bn0": _bn_state_init(cfg.widths[0])}
@@ -140,23 +156,31 @@ def apply(
         prebuild instead). Builds are memoized on the identity of
         ``params`` so repeated calls don't reconstruct the plan table.
 
-    The sparse path is *inference-only with respect to the conv weights*:
-    bind-time prepacking makes them compile-time constants, so gradients
-    do not flow to ``params`` through sparse-bound layers (``train=True``
-    with ``sparse`` raises; train dense, rebind per epoch).
+    A *prepacked* exec (the default bind) is inference-only with respect
+    to the conv weights: bind-time prepacking makes them compile-time
+    constants, so gradients could not reach ``params`` through sparse-bound
+    layers — ``train=True`` with such an exec raises. An
+    ``ExecSpec(trainable=True)`` bind instead passes each layer's (traced)
+    weight to its bound conv per call, whose ``custom_vjp`` runs the
+    transposed-plan / live-tile backward kernels: ``train=True`` is
+    supported, gradients flow, pruned groups get exactly zero gradient.
+    Rebind after each HAPM epoch either way.
     """
-    if train and sparse is not None and sparse is not False:
-        raise ValueError(
-            "sparse execution is inference-only: conv weights are prepacked "
-            "bind-time constants, so training gradients would silently not "
-            "reach params — train with the dense path and rebind the "
-            "SparseConvExec after each HAPM epoch")
     sparse = _resolve_sparse(sparse, params, cfg.quantized)
+    if train and sparse is not None and not sparse.trainable:
+        raise ValueError(
+            "this sparse exec is inference-only: conv weights are prepacked "
+            "bind-time constants, so training gradients would silently not "
+            "reach params — bind with ExecSpec(trainable=True) to train "
+            "through the block-sparse kernels (rebind after each HAPM "
+            "epoch), or train dense")
 
     def conv(path, h, w, stride):
         if sparse is not None:
             fn = sparse.table.get(path)
             if fn is not None:
+                if sparse.trainable:
+                    return fn(h, w, stride=stride)   # per-call (traced) weight
                 return fn(h, stride=stride)   # weight prepacked at bind time
         return _conv(h, w, stride)
 
@@ -245,6 +269,14 @@ class ExecSpec:
     channel-major layouts). ``bm``: M-blocking policy, ``"auto"`` or a
     fixed int. ``n_cu``: the schedule-group granularity. Layers whose plan
     density reaches ``dense_fallback`` stay on dense ``lax.conv``.
+
+    ``trainable``: bound convs take the caller's (traced) weight per call
+    and carry a ``custom_vjp`` — :func:`apply` with ``train=True`` runs
+    the block-sparse kernels forward *and* backward, gradients reach
+    ``params``, pruned groups get exactly zero gradient. Incompatible with
+    ``quantized``/``folded`` (both are inference contracts; QAT trains
+    through the f32 fake-quant view, which this path consumes as-is).
+    Rebind after each HAPM epoch, exactly like inference binds.
     """
 
     packed: bool = True
@@ -254,12 +286,19 @@ class ExecSpec:
     bm: Any = "auto"
     n_cu: int = 12
     dense_fallback: float = 0.999
+    trainable: bool = False
 
     def __post_init__(self):
         if self.bm != "auto" and not isinstance(self.bm, int):
             raise ValueError(f"bm must be 'auto' or an int, got {self.bm!r}")
         if self.n_cu < 1:
             raise ValueError(f"n_cu must be >= 1, got {self.n_cu}")
+        if self.trainable and (self.quantized or self.folded):
+            raise ValueError(
+                "trainable binds run the plain f32 kernels on the caller's "
+                "per-call weights — the int8-code and folded-epilogue "
+                "contracts are inference-only (QAT trains through the "
+                "fake-quant f32 view; rebind quantized/folded for serving)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -280,6 +319,7 @@ class SparseConvExec:
     group_masks_np: Any = None       # {path: (num_groups,) float}
     quantized: bool = False          # int8-code operands, int32-accumulate kernels
     folded: bool = False             # bias/ReLU epilogue fused (apply_folded only)
+    trainable: bool = False          # convs take per-call weights, custom_vjp
     bound_weights: Any = None        # {path: source weight} — staleness check
     implicit: bool = False           # convs bound to the implicit-im2col kernel
     bm: Any = 128                    # M-blocking policy: int (fixed) or "auto"
@@ -632,6 +672,12 @@ def bind_execution(
             # two are identical: round(fake_quant(w)·2^5) == round(w·2^5))
             if not bind_kernels or plan.density >= spec.dense_fallback:
                 return None
+            if spec.trainable:
+                # no prepack: the conv re-packs the caller's (traced)
+                # weight every call, so mid-epoch updates are never stale
+                return make_sparse_conv(layout, gm, bm=spec.bm,
+                                        implicit=spec.implicit,
+                                        trainable=True)
             return make_sparse_conv(layout, gm, bm=spec.bm,
                                     weight=leaf if spec.quantized else w,
                                     implicit=spec.implicit, quant=qspec)
@@ -642,7 +688,8 @@ def bind_execution(
     return SparseConvExec(table=table, plans=plans, n_cu=spec.n_cu,
                           layouts=layouts, group_masks_np=gms,
                           quantized=spec.quantized, folded=spec.folded,
-                          bound_weights=bound,
+                          trainable=spec.trainable,
+                          bound_weights=None if spec.trainable else bound,
                           implicit=_resolve_exec_implicit(spec.implicit,
                                                           layouts),
                           bm=spec.bm, spec=spec)
@@ -752,6 +799,11 @@ def _resolve_sparse(sparse, params, quantized: bool = False) -> Optional[SparseC
                 "this SparseConvExec fuses the folded-BN bias/ReLU epilogue "
                 "(build_sparse_inference) — apply() would run BN on top of "
                 "it; consume it with apply_folded()")
+        if sparse.trainable:
+            # per-call weights: nothing is prepacked, so there is nothing
+            # to go stale and no code/float mismatch — under cfg.quantized
+            # the f32 kernels consume the caller's fake-quant view (QAT)
+            return sparse
         if sparse.quantized != quantized:
             raise ValueError(
                 f"SparseConvExec prepacked with quantized={sparse.quantized} "

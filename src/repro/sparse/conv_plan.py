@@ -49,12 +49,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.groups import (FpgaConvGroupSpec, GroupSpec, TpuTileGroupSpec,
                            apply_group_mask)
-from .block_mask import BlockSparsePlan, plan_from_tile_mask
+from .block_mask import BlockSparsePlan, plan_from_tile_mask, transpose_plan
 
 
 def _ceil_to(n: int, m: int) -> int:
@@ -476,7 +477,8 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
                      bias: Optional[jnp.ndarray] = None,
                      relu: bool = False,
                      implicit: Optional[bool] = None,
-                     quant=None):
+                     quant=None,
+                     trainable: bool = False):
     """Bind a Pallas block-sparse kernel to one conv layer's plan.
 
     Returns ``conv(x, w=None, stride=1, padding="SAME") -> (B, Ho, Wo, cout)``
@@ -521,13 +523,36 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
     epilogue fused at the flush. Output is f32. Forward-only (QAT trains
     through the fake-quant dense path and rebinds).
 
+    ``trainable=True`` makes the closure differentiable in **both**
+    arguments via a ``jax.custom_vjp``: ``conv(x, w, ...)`` re-packs the
+    (possibly traced) ``w`` per call — so grads reach the caller's params —
+    while the forward still dispatches the bound plan (implicit kernel
+    included). The backward reuses the plan machinery end to end: dX runs
+    the **transposed-plan** block-sparse GEMM on the packed output
+    gradient, then the ``im2col → pack`` pipeline's own VJP scatters patch
+    gradients back onto the activation; dW visits only the live tiles
+    (:func:`repro.kernels.ops.make_block_sparse_grad_weight`) and flows
+    through the mask-and-pack transpose, so pruned groups receive *exactly*
+    zero gradient — HAPM's no-resurrection invariant holds by
+    construction. Incompatible with the forward-only ``bias``/``relu``
+    epilogue and ``quant`` paths (QAT trains through the f32 fake-quant
+    view; this path runs the f32 kernels on whatever view the caller
+    passes).
+
     ``conv.plan`` / ``conv.layout`` / ``conv.group_mask`` /
-    ``conv.implicit`` / ``conv.quant`` expose the dispatch accounting.
+    ``conv.implicit`` / ``conv.quant`` / ``conv.trainable`` expose the
+    dispatch accounting.
     """
     from ..kernels import ops
     from ..kernels import implicit_conv as IC
+    from ..kernels.block_sparse_matmul import block_sparse_matmul
     from ..kernels.conv_lowering import conv_out_size, im2col_patches
 
+    if trainable and (quant is not None or bias is not None or relu):
+        raise ValueError(
+            "trainable sparse convs run the plain f32 kernels — the fused "
+            "bias/ReLU epilogue and int8-code paths are inference-only "
+            "(fold/quantize at inference bind time instead)")
     gm = np.asarray(group_mask)
     tm = layout.tile_mask(gm)
     plan = plan_from_tile_mask(tm, layout.block)
@@ -576,16 +601,10 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
     else:
         w_packed, bound_hw = None, None
 
-    def conv(x, w=None, stride: int = 1, padding: str = "SAME"):
-        if w is None:
-            if w_packed is None:
-                raise ValueError("no weight bound at build time — pass w or "
-                                 "rebuild with make_sparse_conv(..., weight=w)")
-            (kx, ky), wp = bound_hw, w_packed
-        else:
-            (kx, ky), wp = w.shape[:2], _pack_w(w)
-        if quant is not None:
-            x = quant.act_codes(x)          # int8 Q3.4 (or calibrated) codes
+    def _run(x, wp, kx, ky, stride, padding):
+        """Forward with an already-packed weight ``wp`` (concrete or
+        traced): the bound plan's implicit kernel when it fits, else the
+        materializing path."""
         B, H, W, C = x.shape
         ho = conv_out_size(H, kx, stride, padding)
         wo = conv_out_size(W, ky, stride, padding)
@@ -614,6 +633,85 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
         out2d = _materializing(bm_eff)(layout.pack_patches(patches), wp)
         return layout.unpack_output(out2d, (B, ho, wo))
 
+    # -- trainable path: a custom_vjp per conv geometry --------------------
+    # The primal dispatches the same bound plan as inference (implicit
+    # kernel included) but re-packs the traced weight per call. Backward:
+    #   dX: packed dY  --transposed-plan GEMM-->  packed dPatches
+    #       --vjp of (im2col -> pack_patches)-->  dX      (pure jnp pipeline)
+    #   dW: live tiles only (block_sparse_grad_weight), then the vjp of
+    #       (mask -> pack_weight) — the group-mask multiply inside _pack_w
+    #       zeroes pruned groups exactly, dead tiles were never computed.
+    if trainable:
+        t_plan = transpose_plan(plan, tm)
+        t_idx, t_cnt = jnp.asarray(t_plan.idx), jnp.asarray(t_plan.cnt)
+    train_fns: dict = {}
+    dw_fns: dict = {}
+
+    def _train_fn(kx, ky, stride, padding):
+        key = (kx, ky, stride, padding)
+        if key in train_fns:
+            return train_fns[key]
+
+        @jax.custom_vjp
+        def fn(x, w):
+            return _run(x, _pack_w(w), kx, ky, stride, padding)
+
+        def fwd(x, w):
+            return fn(x, w), (x, w)
+
+        def bwd(res, g):
+            x, w = res
+            B, ho, wo = g.shape[:3]
+            # pack the output gradient onto the kernel's padded N lanes —
+            # unpack_output is a pure slice/reshape, so its VJP *is* the
+            # transpose packing (zeros into the padded lanes)
+            m_rows = B * ho * wo
+            _, unpack_vjp = jax.vjp(
+                lambda o2: layout.unpack_output(o2, (B, ho, wo)),
+                jnp.zeros((m_rows, layout.n_packed), g.dtype))
+            g2d, = unpack_vjp(g)
+            # packed patches, with the activation-scatter VJP alongside
+            p2d, patch_vjp = jax.vjp(
+                lambda xx: layout.pack_patches(
+                    im2col_patches(xx, kx, ky, stride, padding)), x)
+            bm_eff = adaptive_bm(m_rows, bm_cap) if adaptive else bm_cap
+            # dX: transposed-plan block-sparse GEMM (dP = dY @ Wp^T)
+            wp = _pack_w(w)
+            gp, _ = ops._pad_rows(g2d, bm_eff)
+            dp = block_sparse_matmul(
+                gp, jnp.swapaxes(wp, 0, 1), t_idx, t_cnt,
+                block=t_plan.block, bm=bm_eff,
+                interpret=ops._interpret())[:m_rows]
+            dx, = patch_vjp(dp)
+            # dW: live tiles only, then the mask-and-pack transpose
+            if bm_eff not in dw_fns:
+                dw_fns[bm_eff] = ops.make_block_sparse_grad_weight(
+                    tm, layout.block, bm=bm_eff)
+            dwp = dw_fns[bm_eff](p2d, g2d)
+            _, packw_vjp = jax.vjp(_pack_w, w)
+            dw, = packw_vjp(dwp)
+            return dx.astype(x.dtype), dw.astype(w.dtype)
+
+        fn.defvjp(fwd, bwd)
+        train_fns[key] = fn
+        return fn
+
+    def conv(x, w=None, stride: int = 1, padding: str = "SAME"):
+        if w is None:
+            if w_packed is None:
+                raise ValueError("no weight bound at build time — pass w or "
+                                 "rebuild with make_sparse_conv(..., weight=w)")
+            if quant is not None:
+                x = quant.act_codes(x)      # int8 Q3.4 (or calibrated) codes
+            return _run(x, w_packed, *bound_hw, stride, padding)
+        if trainable:
+            return _train_fn(int(w.shape[0]), int(w.shape[1]), stride,
+                             padding)(x, w)
+        if quant is not None:
+            x = quant.act_codes(x)
+        return _run(x, _pack_w(w), int(w.shape[0]), int(w.shape[1]), stride,
+                    padding)
+
     conv.plan = plan
     conv.layout = layout
     conv.group_mask = gm
@@ -621,4 +719,5 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
     conv.implicit = use_implicit
     conv.bm = bm
     conv.quant = quant
+    conv.trainable = trainable
     return conv

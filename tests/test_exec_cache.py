@@ -208,6 +208,30 @@ def test_mask_change_invalidates_and_rebinds(tiny):
     assert server.update_masks(deeper) == 0
 
 
+def test_noop_update_masks_on_folded_server_keeps_cache(tiny):
+    # fold_batchnorm allocates fresh arrays every _install, so a folded
+    # server comparing the *derived* tree would read every no-op update
+    # as a change and flush the cache; the comparison must run on the
+    # installed params/state leaves instead
+    cfg, pruned, state = tiny
+    server = CnnServer(pruned, state, cfg,
+                       spec=cnn.ExecSpec(folded=True, n_cu=N_CU),
+                       buckets=(1, 2))
+    server.warmup()
+    assert len(server.cache) == 2
+    assert server.update_masks(pruned) == 0       # same arrays: no-op
+    assert len(server.cache) == 2                 # nothing invalidated
+    deeper = _tiny(0.75)[1]
+    assert server.update_masks(deeper) == 2       # real change still flushes
+
+
+def test_infer_empty_request(served, tiny):
+    cfg = tiny[0]
+    out = served.infer(jnp.zeros((0, 16, 16, 3), jnp.float32))
+    assert out.shape == (0, cfg.num_classes)
+    assert out.dtype == jnp.float32
+
+
 def test_distinct_specs_distinct_entries(tiny):
     cfg, pruned, state = tiny
     cache = ExecCache(capacity=8)
@@ -323,13 +347,35 @@ def test_batcher_deadline_drains_bucket_aligned():
 
 def test_batcher_virtual_clock_trace():
     b = BucketBatcher(buckets=(1, 4), max_wait_s=0.01)
-    # burst of 4 at t=0 flushes immediately; straggler at t=0.02 waits out
-    # its deadline alone
+    # 4-image request at t=0 flushes immediately; straggler at t=0.02
+    # waits out its deadline alone
     sim = simulate_trace(b, [(0.0, 4), (0.02, 1)], lambda bucket: 0.001)
-    assert sim["requests"] == 5
+    assert sim["requests"] == 2
+    assert sim["images"] == 5
     assert sim["releases"] == {"1": 1, "4": 1}
-    assert sim["p50_s"] == pytest.approx(0.001, abs=1e-6)
+    # latency is per *request* now: [0.001, 0.011] — p50 interpolates
+    assert sim["p50_s"] == pytest.approx(0.006, abs=1e-6)
     assert sim["p99_s"] == pytest.approx(0.011, abs=1e-3)
+    # both releases ran full: 5 images / 5 capacity, not 2/5 (the
+    # request-counting bug this regression pins down)
+    assert sim["mean_bucket_fill"] == pytest.approx(1.0)
+
+
+def test_batcher_trace_multi_image_fill():
+    # two 2-image requests pack one 4-bucket: fill counts images (4/4),
+    # and an oversize 9-image head releases alone, chunked server-side
+    # into ceil(9/4)=3 max-bucket calls (9/12 capacity)
+    b = BucketBatcher(buckets=(1, 4), max_wait_s=0.01)
+    sim = simulate_trace(b, [(0.0, 2), (0.0, 2)], lambda bucket: 0.001)
+    assert (sim["requests"], sim["images"]) == (2, 4)
+    assert sim["releases"] == {"4": 1}
+    assert sim["mean_bucket_fill"] == pytest.approx(1.0)
+
+    b = BucketBatcher(buckets=(1, 4), max_wait_s=0.01)
+    sim = simulate_trace(b, [(0.0, 9)], lambda bucket: 0.001)
+    assert (sim["requests"], sim["images"]) == (1, 9)
+    assert sim["releases"] == {"4": 1}
+    assert sim["mean_bucket_fill"] == pytest.approx(9 / 12)
 
 
 # ------------------------------------------------------------- report()

@@ -112,6 +112,20 @@ def test_hapm_never_reprunes():
         st = st2
 
 
+def test_hapm_raises_on_non_finite_scores():
+    # NaN sorts after np.inf, so a diverged layer would silently become
+    # unprunable; the update must fail loudly instead
+    specs, params, cfg = _setup(0.5, 1)
+    params = dict(params, b=params["b"].at[0, 0].set(jnp.nan))
+    st = hapm_init(specs, cfg)
+    with pytest.raises(ValueError, match="non-finite"):
+        hapm_epoch_update(st, specs, params, cfg)
+    inf_params = dict(_setup()[1])
+    inf_params["a"] = inf_params["a"].at[0, 0, 0, 0].set(jnp.inf)
+    with pytest.raises(ValueError, match="non-finite"):
+        hapm_epoch_update(st, specs, inf_params, cfg)
+
+
 def test_element_masks_apply():
     specs, params, cfg = _setup(0.5, 1)
     st = hapm_init(specs, cfg)
