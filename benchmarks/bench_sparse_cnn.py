@@ -38,6 +38,16 @@ Execution columns:
   error vs the unquantized f32 reference, and
   ``quantized_hbm_ratio_vs_f32`` the int8-operand byte cut (gated
   ≤ 0.5× at the 50 % operating point).
+- ``wall_streamed_ms`` / ``streamed_*`` — **end-to-end int8 activation
+  streaming** (``ExecSpec(streamed=True)``, BN-folded tree): every
+  layer's fused flush requantizes in-epilogue and emits int8 Q3.4
+  codes which the next layer's gather ingests directly — the wire
+  between layers carries 1 byte/element, no f32 round-trip through
+  HBM. Parity vs the PR-5 per-layer-quantized path with host-side
+  ``round_sat`` at the identical program points
+  (``apply_folded(wire_quantize=True)``) is *bit-exact on codes*
+  (asserted == 0), and ``streamed_hbm_ratio_vs_f32`` prices the
+  1-byte-operand + 1-byte-output contract (gated ≤ 0.28× at 50 %).
 
 ``schedule_steps_live`` is the layout-independent paper granularity,
 asserted equal to the cycle model's DSB step count AND identical across
@@ -115,8 +125,8 @@ def run(args=None) -> dict:
     st50 = None
     print(f"\n{'target':>7} {'impl exec/dense':>16} {'dsb':>6} "
           f"{'dense ms':>9} {'impl ms':>8} {'mat ms':>7} {'kern x':>7} "
-          f"{'hbm x':>6} {'q ms':>7} {'q hbm x':>8} {'util b1':>8} "
-          f"{'max err':>9}")
+          f"{'hbm x':>6} {'q ms':>7} {'q hbm x':>8} {'s ms':>7} "
+          f"{'s hbm x':>8} {'util b1':>8} {'max err':>9}")
     for target in SWEEP:
         hcfg = HAPMConfig(target, 1)
         st = hapm_init(specs, hcfg)
@@ -237,6 +247,39 @@ def run(args=None) -> dict:
         assert bool(jnp.all(q_outs["implicit"] == q_outs["materializing"]))
         err_q_f32 = float(jnp.max(jnp.abs(q_outs["implicit"] - ref)))
 
+        # end-to-end int8 activation streaming: BN-folded tree, every
+        # layer's flush requantizes in-epilogue, the next layer ingests the
+        # emitted Q3.4 codes — the inter-layer wire is 1 byte/element. The
+        # parity reference is the SAME per-layer-quantized kernels (the
+        # PR-5 contract: f32 flush) with host-side round_sat at the
+        # identical program points (apply_folded(wire_quantize=True)), so
+        # code equality isolates *where* the requantize runs, nothing else
+        folded_t = cnn.fold_batchnorm(pruned, state, cfg)
+        fbind = lambda **kw: cnn.bind_execution(
+            folded_t, cfg,
+            spec=cnn.ExecSpec(n_cu=n_cu, quantized=True, folded=True,
+                              dense_fallback=2.0, **kw),
+            specs=specs, group_masks=st.group_masks)
+        s_execs = {kind: fbind(streamed=True, implicit=(kind == "implicit"),
+                               bm="auto" if kind == "implicit" else 128)
+                   for kind in ("implicit", "materializing")}
+        s_outs = {}
+        for kind, e in s_execs.items():
+            fn = jax.jit(lambda xx, ee=e: (cnn.apply_folded(
+                folded_t, xx, cfg, sparse=ee),))
+            out_s, walls["s_" + kind] = _timed(fn, x)
+            s_outs[kind] = out_s[0]
+        wire_exec = fbind(implicit=True)
+        wire_ref = jax.jit(lambda xx: cnn.apply_folded(
+            folded_t, xx, cfg, sparse=wire_exec, wire_quantize=True))(x)
+        err_s_wire = max(float(jnp.max(jnp.abs(o - wire_ref)))
+                         for o in s_outs.values())
+        assert err_s_wire == 0.0, \
+            f"streamed wire diverged from the requantized reference at " \
+            f"{target}: {err_s_wire}"
+        assert bool(jnp.all(s_outs["implicit"] == s_outs["materializing"]))
+        err_s_f32 = float(jnp.max(jnp.abs(s_outs["implicit"] - ref)))
+
         rep = simulate(pruned, state, cfg, accel)
         assert (rep.schedule_steps_live, rep.schedule_steps_total) == \
             (live_groups, total_groups), "cycle-model step accounting drifted"
@@ -255,6 +298,11 @@ def run(args=None) -> dict:
         q_hbm = imp_rep["hbm_bytes_implicit_int8"]
         q_hbm_mat = imp_rep["hbm_bytes_materialized_int8"]
         assert q_hbm == q_execs["implicit"].hbm_bytes(cfg, batch=1)
+        # streamed pricing: 1-byte operands AND 1-byte output writes; a
+        # streamed exec's own-policy hbm_bytes IS the streamed contract
+        s_hbm = imp_rep["hbm_bytes_streamed_int8"]
+        assert s_hbm == s_execs["implicit"].hbm_bytes(cfg, batch=1)
+        assert s_execs["implicit"].report(cfg, batch=1)["streamed"]
         row = {
             "target_group_sparsity": target,
             # grid steps at the PR-3 fixed blocking (deterministic,
@@ -286,6 +334,13 @@ def run(args=None) -> dict:
             "hbm_bytes_moved_quantized": q_hbm,
             "hbm_bytes_moved_quantized_materialized": q_hbm_mat,
             "quantized_hbm_ratio_vs_f32": q_hbm / hbm_imp,
+            # int8 activation streaming: wall clock, wire parity, byte cut
+            "wall_streamed_ms": walls["s_implicit"] * 1e3,
+            "wall_streamed_materializing_ms": walls["s_materializing"] * 1e3,
+            "streamed_max_err_vs_quantized": err_s_wire,
+            "streamed_max_err_vs_f32": err_s_f32,
+            "hbm_bytes_moved_streamed": s_hbm,
+            "streamed_hbm_ratio_vs_f32": s_hbm / hbm_imp,
             # M-padding-aware MAC utilization of the dispatched tiles
             "padded_mac_utilization": imp_rep_b["padded_mac_utilization"],
             "padded_mac_utilization_b1": util_b1,
@@ -317,7 +372,9 @@ def run(args=None) -> dict:
               f"{walls['implicit']*1e3:>8.2f} {walls['materializing']*1e3:>7.2f} "
               f"{row['implicit_vs_materializing_wallclock_speedup']:>7.2f} "
               f"{row['hbm_bytes_ratio']:>6.2f} {walls['q_implicit']*1e3:>7.2f} "
-              f"{row['quantized_hbm_ratio_vs_f32']:>8.2f} {util_b1:>8.3f} "
+              f"{row['quantized_hbm_ratio_vs_f32']:>8.2f} "
+              f"{walls['s_implicit']*1e3:>7.2f} "
+              f"{row['streamed_hbm_ratio_vs_f32']:>8.2f} {util_b1:>8.3f} "
               f"{row['max_err_vs_dense']:>9.2e}")
         assert row["max_err_vs_dense"] < 1e-4, \
             f"sparse path diverged from dense at {target}"
@@ -356,6 +413,12 @@ def run(args=None) -> dict:
     # row == 0.0); vs the f32 reference only quantization noise remains
     assert all(r["quantized_max_err_vs_qat"] == 0.0 for r in rows)
     assert at50["quantized_max_err_vs_f32"] <= 1.0, at50
+    # the streamed execution's whole point: 1-byte operands AND 1-byte
+    # output writes — the end-to-end wire moves ~1/4 the f32 bytes — with
+    # logits code-exact vs the per-layer-quantized path at every sparsity
+    assert at50["streamed_hbm_ratio_vs_f32"] <= 0.28, at50
+    assert all(r["streamed_max_err_vs_quantized"] == 0.0 for r in rows)
+    assert at50["streamed_max_err_vs_f32"] <= 1.0, at50
 
     # ---- training through the kernels at the 50 % operating point -------
     # one SGD-style fwd+bwd step, dense lax.conv vs the trainable sparse
@@ -413,7 +476,10 @@ def run(args=None) -> dict:
           "patch matrix), adaptive bm for the batch-1 tails. Quantized "
           "execution: int8 codes / int32 accumulation on the same schedule "
           "(asserted), bit-exact vs the QAT forward, <= 0.5x the f32 "
-          "operand bytes. Wall clock on CPU runs the kernels in interpret "
+          "operand bytes. Streamed execution: layers exchange int8 Q3.4 "
+          "codes (in-epilogue requantize), code-exact vs the per-layer-"
+          "quantized wire reference (asserted), <= 0.28x the f32 bytes "
+          "end-to-end. Wall clock on CPU runs the kernels in interpret "
           "mode — step counts, HBM bytes and MAC utilization are the "
           "hardware-meaningful columns there.")
     return out

@@ -21,6 +21,16 @@ cache key or invalidation is broken, not that the machine is slow) and
 the bind-amortization ratio must clear the acceptance floor of 5x (a
 machine-speed-cancelling ratio of two walls on the same process).
 
+With ``--require-streaming`` the bench's int8-streaming columns are
+additionally gated — baseline-free hard floors, because both quantities
+have absolute contracts: ``streamed_hbm_ratio_vs_f32`` must clear the
+acceptance ceiling of 0.28 (the 1-byte-operand + 1-byte-output contract
+prices every byte term at 1/4 of f32 — deterministic given the config)
+and ``streamed_max_err_vs_quantized`` must be *exactly* zero (the
+in-epilogue requantize either reproduces the per-layer-quantized wire
+codes bitwise or it is wrong — not a tolerance question). The ratio also
+joins the baseline ``GATES`` so drift below 0.28 still can't regress.
+
 With ``--require-training`` the bench's training columns (the 50 % row's
 ``train_step_*`` / ``grad_parity_max_err`` / ``pruned_group_grad_max``)
 are additionally gated: gradient parity vs the dense path is an absolute
@@ -65,6 +75,10 @@ GATES = {
     # vs QAT is hard-asserted == 0 inside the bench itself)
     "quantized_hbm_ratio_vs_f32": "max",
     "quantized_max_err_vs_f32": "max",
+    # end-to-end int8 streaming: 1-byte operands AND 1-byte output writes
+    # (deterministic; --require-streaming additionally hard-floors it at
+    # 0.28 and the wire parity at exactly zero)
+    "streamed_hbm_ratio_vs_f32": "max",
 }
 # timing-based gates may drop to this fraction of baseline before failing
 # (interpret-mode kernel ratios wobble ~10-20 % across runs/machines);
@@ -76,6 +90,9 @@ WALL_SLACK = 0.7
 # drift at ulp level across BLAS/XLA builds
 ERR_KEYS = {"quantized_max_err_vs_f32"}
 ERR_SLACK = 1.5
+# streaming gates: absolute contracts, no baseline file needed
+STREAMED_HBM_RATIO_MAX = 0.28       # acceptance ceiling (contract prices 0.25)
+STREAMED_WIRE_ERR_MAX = 0.0         # in-epilogue requantize: bitwise or wrong
 # training gates: absolute contracts (baseline-free) + one timing ratio
 TRAIN_GRAD_PARITY_MAX = 1e-4        # dense-vs-sparse gradient max |err|
 TRAIN_PRUNED_GRAD_MAX = 0.0         # no-resurrection: exactly zero
@@ -102,6 +119,21 @@ def check_serving() -> list:
         bad = cur is None or cur < floor - TOL
         print(f"  {key:>44}: {cur if cur is not None else 'MISSING'} "
               f"(floor {floor}) {'REGRESSED' if bad else 'ok'}")
+        if bad:
+            failures.append(key)
+    return failures
+
+
+def check_streaming(row: dict) -> list:
+    """Gate the 50 %-row int8-streaming columns; returns failures."""
+    failures = []
+    for key, ceil in (("streamed_hbm_ratio_vs_f32", STREAMED_HBM_RATIO_MAX),
+                      ("streamed_max_err_vs_quantized",
+                       STREAMED_WIRE_ERR_MAX)):
+        cur = row.get(key)
+        bad = cur is None or cur > ceil + TOL
+        print(f"  {key:>44}: {cur if cur is not None else 'MISSING'} "
+              f"(ceiling {ceil}) {'REGRESSED' if bad else 'ok'}")
         if bad:
             failures.append(key)
     return failures
@@ -143,6 +175,9 @@ def main(argv=None) -> int:
     ap.add_argument("--require-serving", action="store_true",
                     help="also gate BENCH_serving_cnn.json (hit-rate, "
                          "bind amortization)")
+    ap.add_argument("--require-streaming", action="store_true",
+                    help="also hard-floor the bench's int8-streaming "
+                         "columns (HBM ratio <= 0.28, wire parity == 0)")
     ap.add_argument("--require-training", action="store_true",
                     help="also gate the bench's training columns (grad "
                          "parity, pruned-group grads, train-step ratio)")
@@ -193,6 +228,8 @@ def main(argv=None) -> int:
             failures.append(key)
     if args.require_serving:
         failures += check_serving()
+    if args.require_streaming:
+        failures += check_streaming(row)
     if args.require_training:
         failures += check_training(row, baseline)
     if failures:

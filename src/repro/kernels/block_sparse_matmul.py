@@ -11,11 +11,16 @@ Q3.4 × Q2.5 fixed point on the MXU's int8 path. int8 operands accumulate
 in **int32** (exact integer arithmetic, bit-identical to the reference)
 and require a ``scale`` row; the output is the dequantized f32.
 
-Optional fused epilogue at the flush step, in dequant → bias → ReLU
-order: a per-column ``scale`` multiply (f32 ``(N,)`` row — the int8
-dequant, ``out = acc * scale``, per-cout weight scales supported), a
-per-column ``bias`` add (f32, broadcast over rows) and ``relu`` —
-folded-BN inference (conv → +b → ReLU) runs entirely inside the kernel,
+Optional fused epilogue at the flush step, in dequant → bias → ReLU →
+requantize order: a per-column ``scale`` multiply (f32 ``(N,)`` row — the
+int8 dequant, ``out = acc * scale``, per-cout weight scales supported), a
+per-column ``bias`` add (f32, broadcast over rows), ``relu``, and an
+optional per-column ``out_scale`` row that requantizes the flushed value
+back to int8 Q-format codes (``round_sat(out * out_scale, 127)``,
+round-half-even — the same rule :meth:`QuantSpec.act_codes` applies on
+the host) so the output write is 1 byte/value and the next layer's
+gather consumes codes directly, no f32 round-trip through HBM.
+Folded-BN inference (conv → +b → ReLU) runs entirely inside the kernel,
 no extra HBM round trip for the activation. Fully-pruned columns still
 flush ``bias`` (then ReLU), matching the dense ``conv(x, 0) + b``
 semantics.
@@ -35,39 +40,58 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.quant import round_sat
 from ..dist.compat import tpu_compiler_params
+
+# int8 symmetric code bound: requantizing epilogues clamp to ±127 (both
+# Q2.5 and Q3.4 share it — the sign bit plus 7 magnitude bits of an int8)
+INT8_MAX_CODE = 127.0
 
 
 # --- shared epilogue contract (also consumed by kernels.implicit_conv) ----
-# Both block-sparse kernels carry the identical optional [scale?, bias?]
-# trailing operands and the identical dequant -> bias -> ReLU flush; keep
-# the plumbing in ONE place so the kernels cannot drift apart (the bench
-# asserts their bit-parity).
+# Both block-sparse kernels carry the identical optional
+# [scale?, bias?, out_scale?] trailing operands and the identical
+# dequant -> bias -> ReLU -> requantize flush; keep the plumbing in ONE
+# place so the kernels cannot drift apart (the bench asserts their
+# bit-parity).
 
-def quantized_contract(x, w, scale):
+def quantized_contract(x, w, scale, out_scale=None):
     """-> (acc_dtype, out_dtype) for the operand dtypes, validating the
     int8-code contract: int8 × int8 accumulates exactly in int32 and
-    needs a dequant ``scale`` row to emit float output."""
+    needs a dequant ``scale`` row to emit float output; an ``out_scale``
+    row requantizes the flush so the kernel emits int8 codes instead."""
     if x.dtype == jnp.int8:
         assert w.dtype == jnp.int8, "int8 x needs int8 w (codes × codes)"
         assert scale is not None, (
             "int8 operands accumulate integer codes — pass the dequant "
             "scale row so the flush epilogue can emit float output")
-        return jnp.int32, jnp.float32
+        return jnp.int32, (jnp.int8 if out_scale is not None else jnp.float32)
+    assert out_scale is None, (
+        "the requantizing epilogue (out_scale) is part of the int8-code "
+        "contract — f32 operands flush f32")
     return jnp.float32, x.dtype
 
 
-def unpack_epilogue_refs(refs, has_scale, has_bias):
+def unpack_epilogue_refs(refs, has_scale, has_bias, has_out=False):
     """Kernel-side view of the trailing operands: ``refs`` is
-    ``[scale?, bias?, o_ref, acc_ref]`` -> (scale_ref, b_ref, o_ref, acc_ref)."""
+    ``[scale?, bias?, out_scale?, o_ref, acc_ref]``
+    -> (scale_ref, b_ref, out_ref, o_ref, acc_ref)."""
     extra = refs[:-2]
-    scale_ref = extra[0] if has_scale else None
-    b_ref = extra[1 if has_scale else 0] if has_bias else None
-    return scale_ref, b_ref, refs[-2], refs[-1]
+    pos = 0
+    scale_ref = b_ref = out_ref = None
+    if has_scale:
+        scale_ref, pos = extra[pos], pos + 1
+    if has_bias:
+        b_ref, pos = extra[pos], pos + 1
+    if has_out:
+        out_ref = extra[pos]
+    return scale_ref, b_ref, out_ref, refs[-2], refs[-1]
 
 
-def flush_epilogue(acc, scale_ref, b_ref, relu):
-    """dequant → bias → ReLU on the flushed accumulator, f32."""
+def flush_epilogue(acc, scale_ref, b_ref, relu, out_ref=None):
+    """dequant → bias → ReLU on the flushed accumulator, f32; with
+    ``out_ref`` the result is requantized to int8 codes
+    (``round_sat(out * out_scale, 127)``, round-half-even)."""
     out = acc
     if scale_ref is not None:           # int8 path: dequant the int32 acc
         out = out.astype(jnp.float32) * scale_ref[...]
@@ -75,14 +99,17 @@ def flush_epilogue(acc, scale_ref, b_ref, relu):
         out = out.astype(jnp.float32) + b_ref[...].astype(jnp.float32)
     if relu:
         out = jnp.maximum(out, 0.0)
+    if out_ref is not None:             # requantize: emit Q-format codes
+        out = round_sat(out * out_ref[...], INT8_MAX_CODE)
     return out
 
 
-def append_epilogue_inputs(in_specs, inputs, scale, bias, bn):
+def append_epilogue_inputs(in_specs, inputs, scale, bias, bn, out_scale=None):
     """Host-side twin of :func:`unpack_epilogue_refs`: append the
-    ``(1, bn)``-blocked scale/bias rows (both kernels share the
-    ``(i, j, s, idx, cnt)`` index-map arity)."""
-    for row, cast in ((scale, jnp.float32), (bias, None)):
+    ``(1, bn)``-blocked scale/bias/out_scale rows (both kernels share
+    the ``(i, j, s, idx, cnt)`` index-map arity)."""
+    for row, cast in ((scale, jnp.float32), (bias, None),
+                      (out_scale, jnp.float32)):
         if row is not None:
             in_specs.append(
                 pl.BlockSpec((1, bn), lambda i, j, s, idx, cnt: (0, j)))
@@ -91,9 +118,9 @@ def append_epilogue_inputs(in_specs, inputs, scale, bias, bn):
 
 
 def _kernel(idx_ref, cnt_ref, x_ref, w_ref, *refs, acc_dtype, has_scale,
-            has_bias, relu):
-    scale_ref, b_ref, o_ref, acc_ref = unpack_epilogue_refs(
-        refs, has_scale, has_bias)
+            has_bias, has_out, relu):
+    scale_ref, b_ref, out_ref, o_ref, acc_ref = unpack_epilogue_refs(
+        refs, has_scale, has_bias, has_out)
     j, s = pl.program_id(1), pl.program_id(2)
 
     @pl.when(s == 0)
@@ -107,7 +134,7 @@ def _kernel(idx_ref, cnt_ref, x_ref, w_ref, *refs, acc_dtype, has_scale,
 
     @pl.when(s == pl.num_programs(2) - 1)
     def _flush():
-        out = flush_epilogue(acc_ref[...], scale_ref, b_ref, relu)
+        out = flush_epilogue(acc_ref[...], scale_ref, b_ref, relu, out_ref)
         o_ref[...] = out.astype(o_ref.dtype)
 
 
@@ -120,6 +147,7 @@ def block_sparse_matmul(
     cnt: jnp.ndarray,          # (nNb,) int32
     bias: Optional[jnp.ndarray] = None,   # (N,) fused epilogue bias (f32 units)
     scale: Optional[jnp.ndarray] = None,  # (N,) fused dequant row (f32)
+    out_scale: Optional[jnp.ndarray] = None,  # (N,) requantize row -> int8
     *,
     block: Tuple[int, int] = (128, 128),
     bm: int = 128,
@@ -131,12 +159,14 @@ def block_sparse_matmul(
     bk, bn = block
     assert Kw == K and K % bk == 0 and N % bn == 0 and M % bm == 0, (
         f"shapes must be tile-aligned: {x.shape} @ {w.shape}, block={block}, bm={bm}")
-    acc_dtype, out_dtype = quantized_contract(x, w, scale)
+    acc_dtype, out_dtype = quantized_contract(x, w, scale, out_scale)
     nNb = N // bn
     max_nnz = idx.shape[1]
     has_scale = scale is not None
     has_bias = bias is not None
-    for name, row in (("scale", scale), ("bias", bias)):
+    has_out = out_scale is not None
+    for name, row in (("scale", scale), ("bias", bias),
+                      ("out_scale", out_scale)):
         assert row is None or row.shape == (N,), \
             f"{name} must be ({N},), got {row.shape}"
 
@@ -145,7 +175,7 @@ def block_sparse_matmul(
         pl.BlockSpec((bk, bn), lambda i, j, s, idx, cnt: (idx[j, s], j)),
     ]
     inputs = [idx, cnt, x, w]
-    append_epilogue_inputs(in_specs, inputs, scale, bias, bn)
+    append_epilogue_inputs(in_specs, inputs, scale, bias, bn, out_scale)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -156,7 +186,7 @@ def block_sparse_matmul(
     )
     return pl.pallas_call(
         functools.partial(_kernel, acc_dtype=acc_dtype, has_scale=has_scale,
-                          has_bias=has_bias, relu=relu),
+                          has_bias=has_bias, has_out=has_out, relu=relu),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         interpret=interpret,

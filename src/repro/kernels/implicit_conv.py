@@ -110,9 +110,9 @@ def pad_input(x: jnp.ndarray, kx: int, ky: int, stride: int, padding: str,
 
 def _kernel(idx_ref, cnt_ref, x_ref, w_ref, *refs,
             kx, ky, stride, block_oh, bpi, wo, cpk, slot, bm, bk,
-            acc_dtype, has_scale, has_bias, relu):
-    scale_ref, b_ref, o_ref, acc_ref = unpack_epilogue_refs(
-        refs, has_scale, has_bias)
+            acc_dtype, has_scale, has_bias, has_out, relu):
+    scale_ref, b_ref, out_ref, o_ref, acc_ref = unpack_epilogue_refs(
+        refs, has_scale, has_bias, has_out)
     i, j, s = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when(s == 0)
@@ -143,7 +143,7 @@ def _kernel(idx_ref, cnt_ref, x_ref, w_ref, *refs,
 
     @pl.when(s == pl.num_programs(2) - 1)
     def _flush():
-        out = flush_epilogue(acc_ref[...], scale_ref, b_ref, relu)
+        out = flush_epilogue(acc_ref[...], scale_ref, b_ref, relu, out_ref)
         o_ref[...] = out.astype(o_ref.dtype)
 
 
@@ -157,6 +157,7 @@ def implicit_block_sparse_conv(
     cnt: jnp.ndarray,          # (nNb,) int32
     bias: Optional[jnp.ndarray] = None,    # (nNb*bn,) fused epilogue bias
     scale: Optional[jnp.ndarray] = None,   # (nNb*bn,) fused dequant row (int8)
+    out_scale: Optional[jnp.ndarray] = None,  # (nNb*bn,) requantize row -> int8
     *,
     kx: int, ky: int, stride: int,
     block_oh: int, bpi: int, wo: int,
@@ -172,17 +173,20 @@ def implicit_block_sparse_conv(
     int8 operands (``xp``/``w`` are Q-format codes): the gather works on
     codes, accumulation is exact **int32**, and the flush epilogue
     dequantizes through the per-cout ``scale`` row (then bias, then ReLU)
-    — output is f32. Same contract as :mod:`block_sparse_matmul`."""
+    — output is f32, or int8 Q-format codes when the requantizing
+    ``out_scale`` row is passed (streamed layer-to-layer activations).
+    Same contract as :mod:`block_sparse_matmul`."""
     B, Hp, Wp, Cp = xp.shape
     bk, bn = block
     assert Cp % cpk == 0 and w.shape[0] % bk == 0 and w.shape[1] % bn == 0, (
         f"packed shapes off-grid: x {xp.shape} (cpk={cpk}), w {w.shape}, "
         f"block={block}")
-    acc_dtype, out_dtype = quantized_contract(xp, w, scale)
+    acc_dtype, out_dtype = quantized_contract(xp, w, scale, out_scale)
     nNb = w.shape[1] // bn
     max_nnz = idx.shape[1]
     has_scale = scale is not None
     has_bias = bias is not None
+    has_out = out_scale is not None
 
     in_specs = [
         pl.BlockSpec((1, Hp, Wp, cpk),
@@ -190,7 +194,7 @@ def implicit_block_sparse_conv(
         pl.BlockSpec((bk, bn), lambda i, j, s, idx, cnt: (idx[j, s], j)),
     ]
     inputs = [idx, cnt, xp, w]
-    append_epilogue_inputs(in_specs, inputs, scale, bias, bn)
+    append_epilogue_inputs(in_specs, inputs, scale, bias, bn, out_scale)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -204,7 +208,7 @@ def implicit_block_sparse_conv(
                           block_oh=block_oh, bpi=bpi, wo=wo, cpk=cpk,
                           slot=slot, bm=bm, bk=bk, acc_dtype=acc_dtype,
                           has_scale=has_scale, has_bias=has_bias,
-                          relu=relu),
+                          has_out=has_out, relu=relu),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B * bpi * bm, w.shape[1]), out_dtype),
         interpret=interpret,

@@ -61,7 +61,7 @@ def make_block_sparse_grad_weight(tile_mask: np.ndarray,
 
 def make_block_sparse_matmul(plan: BlockSparsePlan, tile_mask: np.ndarray, *,
                              bm: int = 128, bias=None, relu: bool = False,
-                             scale=None):
+                             scale=None, out_scale=None):
     """Build ``f(x, w) -> x @ (w ⊙ mask)`` for a *fixed* pruning plan.
 
     The plan is static (recompiled when HAPM prunes more groups — an
@@ -77,6 +77,8 @@ def make_block_sparse_matmul(plan: BlockSparsePlan, tile_mask: np.ndarray, *,
     layout) is the int8 dequant row: pass it together with int8 code
     operands and the kernel accumulates in int32, flushing
     ``acc * scale (+ bias) (relu)`` as f32 — also forward-only.
+    ``out_scale`` (same packed column layout) additionally requantizes
+    the flush to int8 Q-format codes (streamed activations).
     """
     idx, cnt = jnp.asarray(plan.idx), jnp.asarray(plan.cnt)
     block = plan.block
@@ -84,16 +86,21 @@ def make_block_sparse_matmul(plan: BlockSparsePlan, tile_mask: np.ndarray, *,
     if bias is not None or relu or scale is not None:
         b = None if bias is None else jnp.asarray(bias, jnp.float32)
         sc = None if scale is None else jnp.asarray(scale, jnp.float32)
+        osc = None if out_scale is None else jnp.asarray(out_scale,
+                                                         jnp.float32)
 
         def f_epilogue(x, w):
             lead = x.shape[:-1]
             xp, M = _pad_rows(x.reshape(-1, x.shape[-1]), bm)
-            out = block_sparse_matmul(xp, w, idx, cnt, b, sc, block=block,
-                                      bm=bm, relu=relu,
+            out = block_sparse_matmul(xp, w, idx, cnt, b, sc, osc,
+                                      block=block, bm=bm, relu=relu,
                                       interpret=_interpret())[:M]
             return out.reshape(*lead, w.shape[1])
 
         return f_epilogue
+
+    assert out_scale is None, (
+        "out_scale requires the epilogue path (scale/bias/relu)")
 
     t_plan = transpose_plan(plan, tile_mask)
     t_idx, t_cnt = jnp.asarray(t_plan.idx), jnp.asarray(t_plan.cnt)

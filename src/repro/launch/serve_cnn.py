@@ -44,11 +44,14 @@ class CnnServer:
     """Serve ``cnn.apply`` / ``cnn.apply_folded`` through the exec cache.
 
     ``spec`` fixes the execution contract for every request this server
-    answers (packed/implicit/quantized/folded/bm — one server, one
-    contract; run two servers over one shared :class:`ExecCache` for
+    answers (packed/implicit/quantized/folded/streamed/bm — one server,
+    one contract; run two servers over one shared :class:`ExecCache` for
     mixed fleets). The run config's ``quantized`` flag follows the spec,
     so a quantized bind serves a quantized forward without the caller
-    threading two switches.
+    threading two switches. A ``streamed`` spec (quantized + folded)
+    serves the end-to-end int8 wire: ``apply_folded`` detects the
+    streamed exec and chains the layers on Q3.4 codes — requests still
+    submit f32 frames and receive f32 logits.
     """
 
     def __init__(self, params, state, cfg: cnn.ResNetConfig, *,
@@ -242,6 +245,9 @@ def main(argv=None):
     ap.add_argument("--sparsity", type=float, default=0.5)
     ap.add_argument("--quantized", action="store_true")
     ap.add_argument("--folded", action="store_true")
+    ap.add_argument("--streamed", action="store_true",
+                    help="end-to-end int8 activation streaming (implies "
+                         "--quantized --folded)")
     ap.add_argument("--buckets", type=int, nargs="+", default=None)
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -266,8 +272,9 @@ def main(argv=None):
     st = hapm_epoch_update(hapm_init(specs, hcfg), specs, params, hcfg)
     pruned = apply_masks(params, hapm_element_masks(specs, st))
 
-    spec = cnn.ExecSpec(quantized=args.quantized, folded=args.folded,
-                        n_cu=n_cu)
+    spec = cnn.ExecSpec(quantized=args.quantized or args.streamed,
+                        folded=args.folded or args.streamed,
+                        streamed=args.streamed, n_cu=n_cu)
     server = CnnServer(pruned, state, cfg, spec=spec, buckets=buckets)
     t0 = time.time()
     server.warmup()

@@ -277,6 +277,21 @@ class ExecSpec:
     ``quantized``/``folded`` (both are inference contracts; QAT trains
     through the f32 fake-quant view, which this path consumes as-is).
     Rebind after each HAPM epoch, exactly like inference binds.
+
+    ``streamed``: end-to-end int8 activation streaming — every bound
+    conv's flush **requantizes in-epilogue** and emits int8 Q3.4 codes,
+    which the next layer's gather consumes directly (the wire between
+    layers carries 1-byte codes, no f32 round-trip through HBM — the
+    paper's accelerator contract). Requires ``quantized`` (the wire is
+    int8 codes) **and** ``folded`` (conv → +b → ReLU must complete
+    in-kernel for the flushed value to be the final activation);
+    inference-only. Consume with :func:`apply_folded`, which runs the
+    whole residual dataflow on codes (int32 residual adds) and
+    dequantizes once at the head.
+
+    Invalid field combinations raise a single :class:`ValueError` listing
+    every violated pair by name — the contract table below is the one
+    authority, callers never see layer-dependent messages.
     """
 
     packed: bool = True
@@ -287,18 +302,42 @@ class ExecSpec:
     n_cu: int = 12
     dense_fallback: float = 0.999
     trainable: bool = False
+    streamed: bool = False
 
     def __post_init__(self):
+        # contract table: collect EVERY violation, raise once, naming the
+        # offending fields — not first-failure-wins across layers
+        violations = []
         if self.bm != "auto" and not isinstance(self.bm, int):
-            raise ValueError(f"bm must be 'auto' or an int, got {self.bm!r}")
+            violations.append(f"bm must be 'auto' or an int, got {self.bm!r}")
         if self.n_cu < 1:
-            raise ValueError(f"n_cu must be >= 1, got {self.n_cu}")
-        if self.trainable and (self.quantized or self.folded):
+            violations.append(f"n_cu must be >= 1, got {self.n_cu}")
+        if self.trainable and self.quantized:
+            violations.append(
+                "trainable+quantized: int8-code execution is "
+                "inference-only (QAT trains through the fake-quant f32 "
+                "view; rebind quantized for serving)")
+        if self.trainable and self.folded:
+            violations.append(
+                "trainable+folded: the fused bias/ReLU epilogue is "
+                "inference-only (fold_batchnorm at serving bind time)")
+        if self.trainable and self.streamed:
+            violations.append(
+                "trainable+streamed: activation streaming is "
+                "inference-only (the requantizing epilogue has no VJP)")
+        if self.streamed and not self.quantized:
+            violations.append(
+                "streamed without quantized: the wire between layers "
+                "carries int8 Q3.4 codes — streaming requires the "
+                "int8-code kernels")
+        if self.streamed and not self.folded:
+            violations.append(
+                "streamed without folded: conv → +b → ReLU must complete "
+                "in-kernel for the flush to emit the final activation "
+                "codes — stream a fold_batchnorm tree")
+        if violations:
             raise ValueError(
-                "trainable binds run the plain f32 kernels on the caller's "
-                "per-call weights — the int8-code and folded-epilogue "
-                "contracts are inference-only (QAT trains through the "
-                "fake-quant f32 view; rebind quantized/folded for serving)")
+                "invalid ExecSpec: " + "; ".join(violations))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -319,6 +358,8 @@ class SparseConvExec:
     group_masks_np: Any = None       # {path: (num_groups,) float}
     quantized: bool = False          # int8-code operands, int32-accumulate kernels
     folded: bool = False             # bias/ReLU epilogue fused (apply_folded only)
+    streamed: bool = False           # in-epilogue requantize: layers exchange
+                                     # int8 Q3.4 codes (apply_folded wire mode)
     trainable: bool = False          # convs take per-call weights, custom_vjp
     bound_weights: Any = None        # {path: source weight} — staleness check
     implicit: bool = False           # convs bound to the implicit-im2col kernel
@@ -327,21 +368,24 @@ class SparseConvExec:
                                      # through bind_execution
 
     def _accounting(self, bm=None, implicit=None, operand_bytes=None,
-                    dtype_bytes: int = 4):
+                    dtype_bytes: int = 4, out_bytes=None):
         """The single default-resolution point for every accounting query:
         ``None`` means "this exec's own policy" — ``bm`` resolves to the
         bind-time M-blocking, ``implicit`` to the bound data-movement
         contract, ``operand_bytes`` to 1 byte for a quantized (int8-code)
-        exec and ``dtype_bytes`` otherwise (the output write is always
-        priced at ``dtype_bytes``)."""
+        exec and ``dtype_bytes`` otherwise, ``out_bytes`` to 1 byte for a
+        streamed exec (the requantizing epilogue writes int8 codes) and
+        ``dtype_bytes`` otherwise (the f32 output write)."""
         return (self.bm if bm is None else bm,
                 self.implicit if implicit is None else implicit,
                 ((1 if self.quantized else dtype_bytes)
-                 if operand_bytes is None else operand_bytes))
+                 if operand_bytes is None else operand_bytes),
+                ((1 if self.streamed else dtype_bytes)
+                 if out_bytes is None else out_bytes))
 
     def _m_blocks(self, out: int, batch: int, bm=None, implicit=None):
         from ..sparse.conv_plan import conv_m_blocks
-        bm, implicit, _ = self._accounting(bm, implicit)
+        bm, implicit, _, _ = self._accounting(bm, implicit)
         return conv_m_blocks(out, out, batch, bm=bm, implicit=implicit)
 
     def step_counts(self, cfg: ResNetConfig, batch: int = 1, bm=None):
@@ -370,22 +414,24 @@ class SparseConvExec:
 
     def hbm_bytes(self, cfg: ResNetConfig, batch: int = 1,
                   implicit: Any = None, bm=None, dtype_bytes: int = 4,
-                  operand_bytes: Any = None) -> int:
+                  operand_bytes: Any = None, out_bytes: Any = None) -> int:
         """Analytic HBM bytes one forward moves through the conv layers
         (``sparse.conv_plan.conv_hbm_bytes`` summed over the network) —
         patch-matrix traffic for the materializing path, activation-slab
         streaming for the implicit one. Defaults resolve through
-        :meth:`_accounting`: the exec's own contract, M-blocking, and
-        operand width (1 byte when quantized)."""
+        :meth:`_accounting`: the exec's own contract, M-blocking, operand
+        width (1 byte when quantized), and output-write width (1 byte
+        when streamed — the requantizing epilogue emits codes)."""
         from ..sparse.conv_plan import conv_hbm_bytes
-        bm, use_implicit, operand_bytes = self._accounting(
-            bm, implicit, operand_bytes, dtype_bytes)
+        bm, use_implicit, operand_bytes, out_bytes = self._accounting(
+            bm, implicit, operand_bytes, dtype_bytes, out_bytes)
         total = 0
         for path, stride, feat in conv_layer_order(cfg):
             total += conv_hbm_bytes(
                 self.layouts[path], self.group_masks_np[path], batch, feat,
                 feat, stride, "SAME", implicit=use_implicit,
-                bm=bm, dtype_bytes=dtype_bytes, operand_bytes=operand_bytes)
+                bm=bm, dtype_bytes=dtype_bytes, operand_bytes=operand_bytes,
+                out_bytes=out_bytes)
         return total
 
     def schedule_step_counts(self):
@@ -430,21 +476,25 @@ class SparseConvExec:
         (materializing: fixed ``bm=128``, the PR-3 contract; implicit:
         adaptive ``bm="auto"``) and at f32 / int8 operand widths — they are
         properties of the plans, independent of which contract this exec
-        happens to bind. ``hbm_bytes`` and the grid-step fields describe
-        the exec's *own* policy (own contract, own ``bm``, own operand
-        width). ``per_layer=True`` adds the same fields per conv layer
-        (keys ``"/".join(path)``), which is what the simulator reports
-        next to the cycle model."""
+        happens to bind. ``hbm_bytes_streamed_int8`` is the end-to-end
+        int8 contract on top of the implicit one: 1-byte operands AND
+        1-byte output writes (the requantizing epilogue emits Q3.4 codes
+        the next layer ingests). ``hbm_bytes`` and the grid-step fields
+        describe the exec's *own* policy (own contract, own ``bm``, own
+        operand/output widths). ``per_layer=True`` adds the same fields
+        per conv layer (keys ``"/".join(path)``), which is what the
+        simulator reports next to the cycle model."""
         executed, dense = self.step_counts(cfg, batch=batch)
         live, total = self.schedule_step_counts()
-        hbm = lambda imp, bm, ob: self.hbm_bytes(
+        hbm = lambda imp, bm, ob, out=None: self.hbm_bytes(
             cfg, batch, implicit=imp, bm=bm, dtype_bytes=dtype_bytes,
-            operand_bytes=ob)
+            operand_bytes=ob, out_bytes=dtype_bytes if out is None else out)
         rep = {
             "batch": batch,
             "n_cu": self.n_cu,
             "quantized": self.quantized,
             "folded": self.folded,
+            "streamed": self.streamed,
             "implicit": self.implicit,
             "bm": self.bm,
             "executed_grid_steps": executed,
@@ -462,6 +512,7 @@ class SparseConvExec:
             "hbm_bytes_implicit": hbm(True, "auto", dtype_bytes),
             "hbm_bytes_materialized_int8": hbm(False, 128, 1),
             "hbm_bytes_implicit_int8": hbm(True, "auto", 1),
+            "hbm_bytes_streamed_int8": hbm(True, "auto", 1, 1),
         }
         rep["hbm_bytes_ratio"] = (rep["hbm_bytes_implicit"]
                                   / max(rep["hbm_bytes_materialized"], 1))
@@ -477,10 +528,11 @@ class SparseConvExec:
             plan = self.plans[path]
             o = -(-feat // stride)
             mb, bm_eff = self._m_blocks(o, batch)
-            hbm = lambda imp, bm, ob: conv_hbm_bytes(
+            hbm = lambda imp, bm, ob, out_b=None: conv_hbm_bytes(
                 self.layouts[path], self.group_masks_np[path], batch, feat,
                 feat, stride, "SAME", implicit=imp, bm=bm,
-                dtype_bytes=dtype_bytes, operand_bytes=ob)
+                dtype_bytes=dtype_bytes, operand_bytes=ob,
+                out_bytes=dtype_bytes if out_b is None else out_b)
             out["/".join(path)] = {
                 "executed": mb * int(plan.cnt.sum()),
                 "dense": mb * plan.tiles[0] * plan.tiles[1],
@@ -489,6 +541,7 @@ class SparseConvExec:
                 "hbm_implicit": hbm(True, "auto", dtype_bytes),
                 "hbm_materialized_int8": hbm(False, 128, 1),
                 "hbm_implicit_int8": hbm(True, "auto", 1),
+                "hbm_streamed_int8": hbm(True, "auto", 1, 1),
             }
         return out
 
@@ -614,6 +667,14 @@ def bind_execution(
     the static Q2.5 grid would clip); ``quant_spec`` is rejected here.
     Consume with :func:`apply_folded`.
 
+    ``spec.streamed=True`` (implies ``quantized`` + ``folded``): every
+    bound layer's flush additionally **requantizes in-epilogue** to the
+    uniform Q3.4 wire scale and emits int8 codes, and its ingest skips
+    the per-call quantize when the input is already codes — chained
+    conv→conv layers exchange 1-byte activations through HBM.
+    :func:`apply_folded` detects the streamed exec and runs the whole
+    residual dataflow on codes.
+
     ``cfg`` is accepted for signature uniformity across the two bind
     flavors (layer topology comes from the tree itself; a future
     cfg-dependent bind — e.g. HPIPE-style layer fusion — slots in without
@@ -646,6 +707,11 @@ def bind_execution(
                 "plain-exec only")
         tree = {k: v for k, v in params.items() if k != "fc"}
         weight_of = lambda l: l
+        # streamed wire: every layer emits AND ingests the same static
+        # Q3.4 activation scale (the per-layer chain is uniform — folded
+        # binds calibrate weight scales only, activations stay on the
+        # paper's fixed grid)
+        out_q = Q.QuantSpec() if spec.streamed else None
 
         def bind_one(keys, w, layout, gm, plan, leaf):
             if not bind_kernels or plan.density >= spec.dense_fallback:
@@ -653,9 +719,16 @@ def bind_execution(
             bias = _get_path(params, keys[:-1])["b"]
             relu = keys[-2] in ("conv0", "conv1")   # ReLU directly after BN
             quant = Q.QuantSpec.calibrate(w) if spec.quantized else None
+            if out_q is not None and quant.act_scale != out_q.act_scale:
+                raise ValueError(
+                    f"streamed wire scale mismatch at {'/'.join(keys)}: "
+                    f"layer ingests activation scale {quant.act_scale} but "
+                    f"the wire emits {out_q.act_scale} — streaming needs a "
+                    "uniform per-layer scale chain")
             return make_sparse_conv(layout, gm, bm=spec.bm, weight=w,
                                     bias=bias, relu=relu,
-                                    implicit=spec.implicit, quant=quant)
+                                    implicit=spec.implicit, quant=quant,
+                                    out_quant=out_q)
     else:
         if quant_spec is not None and not spec.quantized:
             raise ValueError("quant_spec without quantized=True would be "
@@ -688,7 +761,7 @@ def bind_execution(
     return SparseConvExec(table=table, plans=plans, n_cu=spec.n_cu,
                           layouts=layouts, group_masks_np=gms,
                           quantized=spec.quantized, folded=spec.folded,
-                          trainable=spec.trainable,
+                          streamed=spec.streamed, trainable=spec.trainable,
                           bound_weights=None if spec.trainable else bound,
                           implicit=_resolve_exec_implicit(spec.implicit,
                                                           layouts),
@@ -904,14 +977,27 @@ def apply_folded(
     cfg: ResNetConfig,
     *,
     sparse: Optional[SparseConvExec] = None,
+    wire_quantize: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Inference on BN-folded params (:func:`fold_batchnorm`): conv → +b →
-    ReLU, no BN state. With ``sparse`` (a :class:`SparseConvExec` from
-    :func:`build_sparse_inference`) every non-fallback conv runs through
-    the block-sparse kernel with the bias/ReLU epilogue *fused at the
-    flush step* — the accelerator's folded-BN execution, in one kernel per
-    layer. Float path (the fixed-point twin lives in ``accel.simulator``);
-    returns logits only.
+    ReLU, no BN state. With ``sparse`` (a folded :class:`SparseConvExec`)
+    every non-fallback conv runs through the block-sparse kernel with the
+    bias/ReLU epilogue *fused at the flush step* — the accelerator's
+    folded-BN execution, in one kernel per layer. Returns logits only.
+
+    **Wire-quantized dataflow** (``ExecSpec(streamed=True)`` execs, or
+    ``wire_quantize=True`` explicitly): every conv layer emits int8 Q3.4
+    codes onto the wire — in-epilogue for streamed kernels, host-side
+    ``round_sat`` at the identical program point otherwise — the first
+    layer ingests the f32 frame, residual adds run on codes in exact
+    int32 arithmetic (``clip(y + sc, 0, 127)`` *is*
+    ``requantize(relu(dequant(y) + dequant(sc)))`` because Q3.4 codes
+    dequantize exactly in f32), and the head dequantizes once before the
+    average pool. ``wire_quantize=True`` on a **non-streamed** quantized
+    folded exec is therefore the bit-exact reference for the streamed
+    path: same kernels, same program points, requantization outside the
+    kernel instead of inside — the bench gates their end-to-end code
+    parity. The default float dataflow (f32 residual adds) is unchanged.
     """
 
     if sparse is not None and not sparse.folded:
@@ -919,14 +1005,38 @@ def apply_folded(
             "apply_folded needs a folded SparseConvExec (build_sparse_"
             "inference) — this one has no fused bias/ReLU epilogue, its "
             "convs would silently drop the folded bias")
+    streamed = sparse is not None and sparse.streamed
+    if streamed and wire_quantize is False:
+        raise ValueError(
+            "this exec's kernels requantize in-epilogue (streamed=True) — "
+            "the wire dataflow cannot be disabled; bind streamed=False "
+            "for the f32-output folded path")
+    if wire_quantize and sparse is not None and not sparse.quantized:
+        raise ValueError(
+            "wire_quantize puts int8 codes on the wire — the bound f32 "
+            "kernels cannot ingest them; use a quantized folded exec "
+            "(the streamed-parity reference) or sparse=None")
+    wire = streamed or bool(wire_quantize)
+    # Q3.4 wire: the uniform activation scale every layer emits/ingests
+    wire_scale = float(Q.Q3_4.scale)
+    max_code = float(Q.Q3_4.max_code)
+
+    def requant(y):
+        return Q.round_sat(y * wire_scale, max_code).astype(jnp.int8)
 
     def conv(path, h, stride, relu):
         fn = sparse.table.get(path) if sparse is not None else None
         if fn is not None:
-            return fn(h, stride=stride)   # bias/ReLU fused per the builder
+            y = fn(h, stride=stride)      # bias/ReLU fused per the builder
+            if not wire or y.dtype == jnp.int8:   # streamed: already codes
+                return y
+            return requant(y)             # wire reference: requantize here
         node = _get_path(folded, path[:-1])
+        if h.dtype == jnp.int8:           # fallback layer on the wire:
+            h = h.astype(jnp.float32) / wire_scale    # exact f32 dequant
         y = _conv(h, node["w"], stride) + node["b"]
-        return jax.nn.relu(y) if relu else y
+        y = jax.nn.relu(y) if relu else y
+        return requant(y) if wire else y
 
     h = conv(("conv0", "w"), x, 1, relu=True)
     for si, n_blocks in enumerate(cfg.stages):
@@ -938,6 +1048,14 @@ def apply_folded(
             y = conv((name, "conv2", "w"), y, 1, relu=False)
             sc = (conv((name, "proj", "w"), h, stride, relu=False)
                   if "proj" in blk else h)
-            h = jax.nn.relu(y + sc)
+            if wire:
+                # residual add + ReLU on codes: int32 widen, clamp to the
+                # post-ReLU code range — exact integer arithmetic
+                h = jnp.clip(y.astype(jnp.int32) + sc.astype(jnp.int32),
+                             0, int(max_code)).astype(jnp.int8)
+            else:
+                h = jax.nn.relu(y + sc)
+    if wire:
+        h = h.astype(jnp.float32) / wire_scale        # head: exact dequant
     pooled = jnp.mean(h, axis=(1, 2))
     return pooled @ folded["fc"]["w"] + folded["fc"]["b"]

@@ -421,7 +421,8 @@ def conv_m_blocks(ho: int, wo: int, batch: int, *, bm="auto",
 def conv_hbm_bytes(layout: ConvGemmLayout, group_mask, batch: int, h: int,
                    w: int, stride: int = 1, padding: str = "SAME", *,
                    implicit: bool, bm="auto", dtype_bytes: int = 4,
-                   operand_bytes: Optional[int] = None) -> int:
+                   operand_bytes: Optional[int] = None,
+                   out_bytes: Optional[int] = None) -> int:
     """Analytic HBM bytes one forward of this conv layer moves — the
     data-movement contract the implicit kernel changes.
 
@@ -441,11 +442,19 @@ def conv_hbm_bytes(layout: ConvGemmLayout, group_mask, batch: int, h: int,
     every per-step slab, patch tile and weight tile shrinks 4×, which is
     where quantized execution banks its bandwidth win. Default ``None``
     = same as ``dtype_bytes`` (the f32 contract).
+
+    ``out_bytes`` prices the *output* write separately: pass ``1`` for
+    the streamed contract (the requantizing epilogue emits int8 codes,
+    so the flush writes 1 byte/value and the next layer's ingest — the
+    operand side of *its* accounting — reads codes back). Default
+    ``None`` = ``dtype_bytes`` (the f32 output write the PR-5 quantized
+    contract still paid for).
     """
     from ..kernels.conv_lowering import conv_out_size
     from ..kernels.implicit_conv import choose_m_block, same_pads
 
     ob = dtype_bytes if operand_bytes is None else operand_bytes
+    ob_out = dtype_bytes if out_bytes is None else out_bytes
     geo = layout.implicit_geometry()
     kx, ky, cin, cout = layout.spec.shape
     ho, wo = conv_out_size(h, kx, stride, padding), conv_out_size(w, ky, stride, padding)
@@ -456,7 +465,7 @@ def conv_hbm_bytes(layout: ConvGemmLayout, group_mask, batch: int, h: int,
                                implicit=implicit and geo is not None)
     steps = mb * live
     w_bytes = steps * bk * bn * ob
-    out_bytes = mb * bm_eff * layout.n_packed * dtype_bytes
+    out_write = mb * bm_eff * layout.n_packed * ob_out
     if implicit and geo is not None and choose_m_block(
             ho, wo, cap=128 if bm == "auto" else int(bm)) is not None:
         if padding == "SAME":
@@ -465,11 +474,11 @@ def conv_hbm_bytes(layout: ConvGemmLayout, group_mask, batch: int, h: int,
             pt = pb = pw0 = pw1 = 0
         hp, wp = h + pt + pb, w + pw0 + pw1
         slab = hp * wp * geo["cpk"] * ob
-        return steps * slab + w_bytes + out_bytes
+        return steps * slab + w_bytes + out_write
     x_bytes = batch * h * w * cin * ob
     patches = mb * bm_eff * layout.k_packed * ob               # write once
     patch_reads = steps * bm_eff * bk * ob                     # kernel DMA
-    return x_bytes + patches + patch_reads + w_bytes + out_bytes
+    return x_bytes + patches + patch_reads + w_bytes + out_write
 
 
 def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
@@ -478,6 +487,7 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
                      relu: bool = False,
                      implicit: Optional[bool] = None,
                      quant=None,
+                     out_quant=None,
                      trainable: bool = False):
     """Bind a Pallas block-sparse kernel to one conv layer's plan.
 
@@ -521,7 +531,17 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
     (static Q3.4 or the spec's calibrated scale), and *both* kernels run
     int8-operand / int32-accumulate passes with the dequant → bias → ReLU
     epilogue fused at the flush. Output is f32. Forward-only (QAT trains
-    through the fake-quant dense path and rebinds).
+    through the fake-quant dense path and rebinds). An activation that is
+    *already* int8 codes skips the per-call quantize — the streamed
+    layer-to-layer ingest.
+
+    ``out_quant`` (a second :class:`QuantSpec`, requires ``quant``):
+    requantize **in-epilogue** — the flush multiplies by the output
+    activation scale and rounds-saturates to int8 Q-format codes inside
+    the kernel, so the layer *emits* 1-byte codes the next layer's gather
+    consumes directly (no f32 round-trip through HBM). The closure then
+    returns int8 codes; dequantize at the chain boundary with
+    ``code / out_quant.act_scale``.
 
     ``trainable=True`` makes the closure differentiable in **both**
     arguments via a ``jax.custom_vjp``: ``conv(x, w, ...)`` re-packs the
@@ -553,6 +573,10 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
             "trainable sparse convs run the plain f32 kernels — the fused "
             "bias/ReLU epilogue and int8-code paths are inference-only "
             "(fold/quantize at inference bind time instead)")
+    if out_quant is not None and quant is None:
+        raise ValueError(
+            "out_quant requantizes the int8 epilogue — it requires quant "
+            "(int8-code operands) as well")
     gm = np.asarray(group_mask)
     tm = layout.tile_mask(gm)
     plan = plan_from_tile_mask(tm, layout.block)
@@ -570,6 +594,10 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
     # spec's (static or calibrated) scales, never on a per-call weight
     packed_scale = (None if quant is None else layout.pack_bias(
         jnp.asarray(quant.dequant_row(layout.spec.shape[-1]), jnp.float32)))
+    # requantize row: one uniform output activation scale per cout lane
+    # (padding lanes get scale 0 -> code 0, discarded by unpack_output)
+    packed_out_scale = (None if out_quant is None else layout.pack_bias(
+        jnp.full((layout.spec.shape[-1],), out_quant.act_scale, jnp.float32)))
     idx_dev, cnt_dev = jnp.asarray(plan.idx), jnp.asarray(plan.cnt)
     mms: dict = {}        # materializing kernels, keyed by effective bm
 
@@ -577,7 +605,7 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
         if bm_eff not in mms:
             mms[bm_eff] = ops.make_block_sparse_matmul(
                 plan, tm, bm=bm_eff, bias=packed_bias, relu=relu,
-                scale=packed_scale)
+                scale=packed_scale, out_scale=packed_out_scale)
         return mms[bm_eff]
 
     gm_dev = jnp.asarray(gm, jnp.float32)
@@ -620,6 +648,7 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
                 if slab <= IC.SLAB_VMEM_BUDGET:
                     out2d = IC.implicit_block_sparse_conv(
                         xp, wp, idx_dev, cnt_dev, packed_bias, packed_scale,
+                        packed_out_scale,
                         kx=kx, ky=ky, stride=stride, block_oh=block_oh,
                         bpi=bpi, wo=wo, block=layout.block, bm=bm_eff,
                         cpk=cpk, slot=slot, relu=relu,
@@ -701,13 +730,13 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
             if w_packed is None:
                 raise ValueError("no weight bound at build time — pass w or "
                                  "rebuild with make_sparse_conv(..., weight=w)")
-            if quant is not None:
+            if quant is not None and x.dtype != jnp.int8:
                 x = quant.act_codes(x)      # int8 Q3.4 (or calibrated) codes
             return _run(x, w_packed, *bound_hw, stride, padding)
         if trainable:
             return _train_fn(int(w.shape[0]), int(w.shape[1]), stride,
                              padding)(x, w)
-        if quant is not None:
+        if quant is not None and x.dtype != jnp.int8:
             x = quant.act_codes(x)
         return _run(x, _pack_w(w), int(w.shape[0]), int(w.shape[1]), stride,
                     padding)
@@ -719,5 +748,6 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
     conv.implicit = use_implicit
     conv.bm = bm
     conv.quant = quant
+    conv.out_quant = out_quant
     conv.trainable = trainable
     return conv
