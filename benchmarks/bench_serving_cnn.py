@@ -30,6 +30,18 @@ This bench measures both sides and the machinery between them:
   p50 and bind-amortization ratio (gated >= 5x), served logits asserted
   bit-identical to a direct streamed ``apply_folded``.
 
+The ``--chaos`` scenario (also run as part of the full bench) drives a
+server wired with a seeded :class:`~repro.launch.resilience.FaultPlan` —
+injected bind failures, bind latency, non-finite outputs and a corrupted
+mask update — plus per-request deadlines and an admission budget, and
+asserts the resilience contract: **zero wrong answers** (every served
+output bit-exact against a clean reference server forced to the ladder
+rung the request ran under), every injected bind failure resolved by a
+retry or a recorded downgrade, and every shed request counted — never
+hung. The ``chaos`` row (p50/p99 under faults, shed rate, fault/recovery
+counters) merges into the same JSON; ``check_sparse_regression
+--require-resilience`` gates it.
+
 Emits ``BENCH_serving_cnn.json`` at the repo root (CI artifact; the
 regression checker gates hit-rate and amortization).
 """
@@ -38,6 +50,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import tempfile
 import time
 
 import jax
@@ -46,6 +59,7 @@ import numpy as np
 from repro.core import (HAPMConfig, apply_masks, hapm_element_masks,
                         hapm_epoch_update, hapm_init)
 from repro.launch.exec_cache import BucketBatcher
+from repro.launch.resilience import FaultPlan, ServePolicy
 from repro.launch.serve_cnn import CnnServer, simulate_trace
 from repro.models import cnn
 
@@ -59,6 +73,199 @@ def _pruned_model(cfg, n_cu, sparsity, seed=0):
     hcfg = HAPMConfig(sparsity, 1)
     st = hapm_epoch_update(hapm_init(specs, hcfg), specs, params, hcfg)
     return apply_masks(params, hapm_element_masks(specs, st)), state, specs
+
+
+def run_chaos(args=None) -> dict:
+    """Fault-injection scenario: a streamed server under a seeded
+    :class:`FaultPlan`, deadlines and an admission budget. Returns the
+    ``chaos`` row (merged into ``BENCH_serving_cnn.json``); asserts the
+    whole resilience contract on the way."""
+    fast = bool(getattr(args, "fast", False) or getattr(args, "smoke", False))
+    print("-" * 72)
+    print("chaos: fault injection + deadlines against the resilient server")
+    print("-" * 72)
+    if fast:
+        cfg = cnn.ResNetConfig(stages=(1, 1), widths=(8, 16), image_size=16)
+        n_cu, buckets, direct_reps = 4, (1, 4, 8), 6
+    else:
+        cfg = cnn.ResNetConfig(stages=(1, 1, 2), widths=(16, 32, 64),
+                               image_size=16)
+        n_cu, buckets, direct_reps = 12, (1, 8, 32), 8
+    h = cfg.image_size
+    pruned, state, _ = _pruned_model(cfg, n_cu, sparsity=0.5)
+    pruned75, _, _ = _pruned_model(cfg, n_cu, sparsity=0.75)
+    spec = cnn.ExecSpec(n_cu=n_cu, quantized=True, folded=True,
+                        streamed=True, dense_fallback=2.0)
+
+    # deterministic schedule, four fault kinds (call indices 0-based):
+    # - bind 0+1: transient failures — exhausts max_bind_retries=1 at the
+    #   streamed rung, recorded downgrade to quantized;
+    # - bind 2: injected bind latency at the quantized rung;
+    # - output 1: a NaN logit — guardrail quarantines the quantized
+    #   entry, recorded downgrade to f32;
+    # - masks 1: a flipped group bit in the mid-trace mask update —
+    #   fingerprint validation repairs it.
+    faults = FaultPlan(seed=0, bind_fail_calls=(0, 1),
+                       bind_delay_calls=(2,), bind_delay_s=0.001,
+                       nonfinite_calls=(1,), mask_corrupt_calls=(1,))
+    policy = ServePolicy(max_bind_retries=1, bind_backoff_s=0.001)
+    server = CnnServer(pruned, state, cfg, spec=spec, buckets=buckets,
+                       policy=policy, faults=faults)
+    fpA = server.mask_fp                     # masks call 0: clean derive
+
+    # -- direct phase: latency under faults, every answer verified ------
+    rng = np.random.RandomState(0)
+    direct, lats = [], []
+    for i in range(direct_reps):
+        x = rng.rand(1 + (i % buckets[1]), h, h, 3).astype(np.float32)
+        t0 = time.time()
+        y = np.asarray(server.infer(x))
+        lats.append(time.time() - t0)
+        direct.append((x, y, server.last_request_level, server.mask_fp))
+    lat = np.asarray(lats)
+    direct_p50_ms = float(np.percentile(lat, 50)) * 1e3
+    direct_p99_ms = float(np.percentile(lat, 99)) * 1e3
+    print(f"[chaos] direct under faults: p50 {direct_p50_ms:.2f} ms  "
+          f"p99 {direct_p99_ms:.2f} ms  level={server.level} "
+          f"({server.stats()['rung']})")
+
+    # -- trace phase: deadlines + admission budget + mid-trace update ---
+    mb = buckets[-1]
+    budget = mb
+    batcher = BucketBatcher(buckets, max_wait_s=0.004,
+                            max_pending_images=budget)
+    img_cache, sizes, served_fp = {}, {}, {}
+
+    def images_fn(rid, n):
+        if rid not in img_cache:
+            img_cache[rid] = np.random.RandomState(1000 + rid).rand(
+                n, h, h, 3).astype(np.float32)
+            sizes[rid] = n
+            served_fp[rid] = server.mask_fp   # fp at release == served fp
+        return img_cache[rid]
+
+    # segment A (t < 0.1) drains (gaps > max_wait) before the update
+    # event at t=0.5; segment B serves the 0.75-pruned weights. pairs
+    # that fill the max bucket release (and serve) immediately; the
+    # near-simultaneous overflow pair pushes past the admission budget
+    # (overload shed); isolated requests wait out max_wait (0.004) >
+    # deadline (0.003) and are deadline-shed at the flush — completed,
+    # overload-shed and deadline-shed all exercised in one trace.
+    trace = [(0.000, mb - 2), (0.001, 2),           # fills -> served
+             (0.010, mb - 2), (0.0101, 4),          # overload: budget + 2
+             (0.080, mb - 2), (0.081, 2),           # fills -> served
+             (1.000, mb - 2), (1.001, 2),           # served (new masks)
+             (1.010, 1)]                            # isolated -> deadline
+    events = [(0.5, lambda: server.update_masks(pruned75))]
+    sim = simulate_trace(batcher, trace, lambda b: 0.002,
+                         server=server, images_fn=images_fn,
+                         deadline_s=0.003, events=events)
+    assert server.resilience["mask_repairs"] >= 1, \
+        "the corrupted mask update must be caught and repaired"
+    assert sim["shed"] > 0, "the trace must exercise the shedding paths"
+    assert sim["requests"] + sim["shed"] == sim["submitted"]
+    shed_rate = sim["shed"] / sim["submitted"]
+    print(f"[chaos] trace: {sim['requests']}/{sim['submitted']} served, "
+          f"{sim['shed_deadline']} deadline-shed, "
+          f"{sim['shed_overload']} overload-shed "
+          f"(shed rate {shed_rate:.2f})")
+
+    # -- zero wrong answers: bit-exact vs clean per-rung references -----
+    # a degraded answer must equal what a *fault-free* server pinned to
+    # the same ladder rung (and same weights) would have served. a
+    # multi-chunk request that degraded mid-way records its final rung,
+    # so accept a match at any rung — the answer must be bit-exact to
+    # SOME clean rung's output or it is a wrong answer.
+    refs = {}
+
+    def ref_for(fp, level):
+        key = (fp, level)
+        if key not in refs:
+            weights = pruned if fp == fpA else pruned75
+            s = CnnServer(weights, state, cfg, spec=spec, buckets=buckets)
+            assert s.mask_fp == fp, "reference must reproduce the served fp"
+            s.force_level(level)
+            refs[key] = s
+        return refs[key]
+
+    def verify(x, y, level, fp):
+        for lvl in [level] + [l for l in range(len(server.rungs))
+                              if l != level]:
+            if bool((np.asarray(ref_for(fp, lvl).infer(x)) == y).all()):
+                return lvl
+        return None
+
+    wrong = at_recorded = 0
+    checked = list(direct) + [
+        (img_cache[rid], sim["outputs"][rid], sim["rungs"][rid],
+         served_fp[rid]) for rid in sorted(sim["outputs"])]
+    for x, y, level, fp in checked:
+        got = verify(x, y, level, fp)
+        if got is None:
+            wrong += 1
+        elif got == level:
+            at_recorded += 1
+    assert wrong == 0, f"{wrong} wrong answer(s) under chaos"
+    print(f"[chaos] {len(checked)} answers verified bit-exact vs clean "
+          f"references ({at_recorded} at the recorded rung), 0 wrong")
+
+    # -- every injected bind failure resolved: a retry absorbed it or a
+    # ladder downgrade was recorded — none leaked to the caller
+    res = server.resilience
+    assert faults.injected["bind_fail"] == \
+        res["bind_retries"] + res["bind_failures"], (faults.injected, res)
+    assert res["downgrades"] >= res["bind_failures"]
+    kinds = sorted(k for k, v in faults.injected.items() if v > 0)
+    assert len(kinds) >= 3, kinds
+    print(f"[chaos] fault kinds {kinds}: {faults.total_injected} injected, "
+          f"{res['bind_retries']} retries, {res['bind_failures']} bind "
+          f"failures -> {res['downgrades']} recorded downgrades")
+
+    # -- crash recovery: snapshot -> warm restart skips mask derivation -
+    snap_dir = tempfile.mkdtemp(prefix="cnn_server_snap_")
+    server.snapshot(snap_dir, step=1)
+    warm = CnnServer(pruned75, state, cfg, spec=spec, buckets=buckets,
+                     snapshot_dir=snap_dir)
+    warm_ok = warm.mask_fp == server.mask_fp
+    assert warm_ok, "warm restart must reproduce the snapshot fingerprint"
+    x1 = rng.rand(1, h, h, 3).astype(np.float32)
+    assert bool((np.asarray(warm.infer(x1)) ==
+                 np.asarray(ref_for(server.mask_fp, 0).infer(x1))).all())
+    print(f"[chaos] snapshot -> warm restart: fingerprint + outputs match")
+
+    row = {
+        "config": {"n_cu": n_cu, "buckets": list(buckets), "fast": fast,
+                   "direct_reps": direct_reps, "budget_images": budget,
+                   "deadline_s": 0.003},
+        "fault_kinds": kinds,
+        "faults_injected": dict(faults.injected),
+        "direct_p50_ms": direct_p50_ms,
+        "direct_p99_ms": direct_p99_ms,
+        "trace": {k: sim[k] for k in
+                  ("submitted", "requests", "shed", "shed_deadline",
+                   "shed_overload", "p50_s", "p99_s")},
+        "shed_rate": shed_rate,
+        "resilience": dict(res),
+        "degrade_log": list(server.degrade_log),
+        "answers_checked": len(checked),
+        "answers_at_recorded_rung": at_recorded,
+        "wrong_answers": wrong,
+        "snapshot_warm_restart": warm_ok,
+    }
+    return row
+
+
+def _merge_chaos(row: dict) -> None:
+    """Write/refresh only the ``chaos`` key of the bench JSON (the CI
+    smoke step re-runs chaos without re-measuring the timing rows)."""
+    out = {}
+    if os.path.exists(OUT_JSON):
+        with open(OUT_JSON) as f:
+            out = json.load(f)
+    out["chaos"] = row
+    with open(OUT_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\nmerged chaos row into {OUT_JSON}")
 
 
 def run(args=None) -> dict:
@@ -253,6 +460,7 @@ def run(args=None) -> dict:
         "batcher": batch_sim,
         "hbm_per_image": hbm,
         "cache": server.cache.stats(),
+        "chaos": run_chaos(args),
     }
     with open(OUT_JSON, "w") as f:
         json.dump(out, f, indent=2)
@@ -265,8 +473,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description="CNN serving bench")
     ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
                     default=False)
+    ap.add_argument("--chaos", action="store_true",
+                    help="run only the fault-injection scenario and merge "
+                         "its row into the bench JSON")
     args = ap.parse_args(argv)
-    run(args)
+    if args.chaos:
+        _merge_chaos(run_chaos(args))
+    else:
+        run(args)
 
 
 if __name__ == "__main__":

@@ -31,6 +31,16 @@ in-epilogue requantize either reproduces the per-layer-quantized wire
 codes bitwise or it is wrong — not a tolerance question). The ratio also
 joins the baseline ``GATES`` so drift below 0.28 still can't regress.
 
+With ``--require-resilience`` the serving artifact's ``chaos`` row is
+additionally gated — every gate an absolute contract, because the
+resilience properties are binary: **zero wrong answers** under fault
+injection (each served output bit-exact against a clean reference
+server pinned to the ladder rung the request ran under), every injected
+bind failure resolved by a retry or a recorded ladder downgrade, every
+submitted request served or counted as shed (never hung), at least
+three distinct fault kinds actually injected, a bounded shed rate
+(<= 0.5), and a fingerprint-verified snapshot warm restart.
+
 With ``--require-training`` the bench's training columns (the 50 % row's
 ``train_step_*`` / ``grad_parity_max_err`` / ``pruned_group_grad_max``)
 are additionally gated: gradient parity vs the dense path is an absolute
@@ -93,6 +103,9 @@ ERR_SLACK = 1.5
 # streaming gates: absolute contracts, no baseline file needed
 STREAMED_HBM_RATIO_MAX = 0.28       # acceptance ceiling (contract prices 0.25)
 STREAMED_WIRE_ERR_MAX = 0.0         # in-epilogue requantize: bitwise or wrong
+# resilience gates: absolute contracts over the chaos row, baseline-free
+CHAOS_MIN_FAULT_KINDS = 3           # the scenario must actually inject chaos
+CHAOS_SHED_RATE_MAX = 0.5           # bounded shedding, never wholesale refusal
 # training gates: absolute contracts (baseline-free) + one timing ratio
 TRAIN_GRAD_PARITY_MAX = 1e-4        # dense-vs-sparse gradient max |err|
 TRAIN_PRUNED_GRAD_MAX = 0.0         # no-resurrection: exactly zero
@@ -134,6 +147,63 @@ def check_streaming(row: dict) -> list:
         bad = cur is None or cur > ceil + TOL
         print(f"  {key:>44}: {cur if cur is not None else 'MISSING'} "
               f"(ceiling {ceil}) {'REGRESSED' if bad else 'ok'}")
+        if bad:
+            failures.append(key)
+    return failures
+
+
+def check_resilience() -> list:
+    """Gate the chaos row's absolute contracts; returns failures.
+
+    The chaos scenario's value is binary properties, so every gate is a
+    hard contract, not a tolerance: zero wrong answers (each served
+    output bit-exact vs a clean reference at the rung it ran under),
+    every injected bind failure absorbed by a retry or a recorded ladder
+    downgrade, every submitted request either served or counted as shed
+    (never hung), at least CHAOS_MIN_FAULT_KINDS distinct fault kinds
+    actually injected, and a bounded shed rate."""
+    if not os.path.exists(SERVING_JSON):
+        return [f"missing {SERVING_JSON} (run benchmarks.bench_serving_cnn)"]
+    with open(SERVING_JSON) as f:
+        rep = json.load(f)
+    chaos = rep.get("chaos")
+    if not chaos:
+        print("  chaos row: MISSING (run benchmarks.bench_serving_cnn "
+              "--chaos) REGRESSED")
+        return ["chaos_row_missing"]
+    failures = []
+    res = chaos.get("resilience", {})
+    trace = chaos.get("trace", {})
+    injected = chaos.get("faults_injected", {})
+    checks = [
+        ("chaos_wrong_answers", chaos.get("wrong_answers"), 0,
+         "== (bit-exact per rung or it is a wrong answer)"),
+        ("chaos_fault_kinds", len(chaos.get("fault_kinds", [])),
+         CHAOS_MIN_FAULT_KINDS, ">="),
+        ("chaos_bind_faults_resolved",
+         injected.get("bind_fail", 0)
+         - res.get("bind_retries", 0) - res.get("bind_failures", 0), 0,
+         "== (each injected bind failure retried or downgraded)"),
+        ("chaos_requests_accounted",
+         trace.get("submitted", -1)
+         - trace.get("requests", 0) - trace.get("shed", 0), 0,
+         "== (served + shed == submitted: nothing hangs)"),
+        ("chaos_shed_rate", chaos.get("shed_rate"), CHAOS_SHED_RATE_MAX,
+         "<="),
+        ("chaos_snapshot_warm_restart",
+         chaos.get("snapshot_warm_restart"), True, "=="),
+    ]
+    for key, cur, bound, op in checks:
+        if cur is None:
+            bad = True
+        elif op.startswith("=="):
+            bad = cur != bound
+        elif op == ">=":
+            bad = cur < bound
+        else:
+            bad = cur > bound + TOL
+        print(f"  {key:>44}: {cur if cur is not None else 'MISSING'} "
+              f"({op} {bound}) {'REGRESSED' if bad else 'ok'}")
         if bad:
             failures.append(key)
     return failures
@@ -181,6 +251,9 @@ def main(argv=None) -> int:
     ap.add_argument("--require-training", action="store_true",
                     help="also gate the bench's training columns (grad "
                          "parity, pruned-group grads, train-step ratio)")
+    ap.add_argument("--require-resilience", action="store_true",
+                    help="also gate the serving chaos row (zero wrong "
+                         "answers, bind faults resolved, bounded shed rate)")
     args = ap.parse_args(argv)
 
     with open(BENCH_JSON) as f:
@@ -232,6 +305,8 @@ def main(argv=None) -> int:
         failures += check_streaming(row)
     if args.require_training:
         failures += check_training(row, baseline)
+    if args.require_resilience:
+        failures += check_resilience()
     if failures:
         print(f"\nexecuted-sparsity regression at {TARGET:.0%} group "
               f"sparsity: {failures}", file=sys.stderr)

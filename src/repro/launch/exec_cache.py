@@ -98,11 +98,13 @@ class ExecCache:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self._entries: "OrderedDict[tuple, CacheEntry]" = OrderedDict()
+        self._quarantined: set = set()
         self.hits = 0
         self.misses = 0
         self.binds = 0
         self.evictions = 0
         self.invalidated = 0
+        self.quarantined = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -114,6 +116,9 @@ class ExecCache:
         return list(self._entries)
 
     def get(self, key: tuple) -> Optional[CacheEntry]:
+        if key[:-1] in self._quarantined:
+            self.misses += 1
+            return None
         entry = self._entries.get(key)
         if entry is None:
             self.misses += 1
@@ -123,6 +128,11 @@ class ExecCache:
         return entry
 
     def put(self, key: tuple, entry: CacheEntry) -> CacheEntry:
+        if key[:-1] in self._quarantined:
+            raise RuntimeError(
+                f"bind key {key[:-1]} is quarantined (produced non-finite "
+                "outputs) — rebind one ladder rung down instead of "
+                "re-caching it")
         self._entries[key] = entry
         self._entries.move_to_end(key)
         while len(self._entries) > self.capacity:
@@ -133,10 +143,38 @@ class ExecCache:
     def shared_exec(self, bind_key: tuple) -> Optional[Any]:
         """An already-bound exec for ``(arch_fp, mask_fp, spec)``, from
         any bucket's entry — the bind is batch-agnostic."""
+        if bind_key in self._quarantined:
+            return None
         for key, entry in self._entries.items():
             if key[:-1] == bind_key:
                 return entry.exec_
         return None
+
+    # -- quarantine (non-finite guardrail) ----------------------------
+    def quarantine(self, bind_key: tuple) -> int:
+        """Evict every bucket entry of this bind and refuse to serve or
+        re-admit it (``get`` misses, ``put`` raises) until
+        :meth:`clear_quarantine`. The serving guardrail calls this when a
+        bind's outputs go non-finite — the degraded rebind happens one
+        ladder rung *down*, never at the poisoned key. Returns the number
+        of entries evicted."""
+        stale = [k for k in self._entries if k[:-1] == bind_key]
+        for k in stale:
+            del self._entries[k]
+        self._quarantined.add(bind_key)
+        self.quarantined += 1
+        return len(stale)
+
+    def is_quarantined(self, bind_key: tuple) -> bool:
+        return bind_key in self._quarantined
+
+    def clear_quarantine(self) -> int:
+        """Lift every quarantine (a mask update changed the binds — the
+        poisoned fingerprints can no longer be produced). Returns how
+        many keys were released."""
+        n = len(self._quarantined)
+        self._quarantined.clear()
+        return n
 
     def invalidate(self, arch_fp: str,
                    keep_mask_fp: Optional[str] = None) -> int:
@@ -162,6 +200,7 @@ class ExecCache:
                 "hits": self.hits, "misses": self.misses,
                 "binds": self.binds, "evictions": self.evictions,
                 "invalidated": self.invalidated,
+                "quarantined": self.quarantined,
                 "hit_rate": self.hit_rate}
 
 
@@ -170,6 +209,7 @@ class _Pending:
     request_id: int
     batch: int
     t_submit: float
+    deadline: Optional[float] = None
 
 
 class BucketBatcher:
@@ -190,16 +230,37 @@ class BucketBatcher:
     Requests are indivisible here (one request = one image row count);
     multi-image requests are split into per-chunk submissions by the
     server before they reach the batcher.
+
+    **Deadlines + admission control** (the overload story): ``submit``
+    accepts an optional absolute ``deadline``; a pending request whose
+    deadline passes before it is released is *shed* at the next ``poll``
+    (dropped from the queue, its id retrievable via :meth:`take_shed`,
+    counted in ``shed_deadline``) — a queue that cannot keep up sheds
+    late work instead of serving it pointlessly late. With
+    ``max_pending_images`` set, ``submit`` refuses work that would push
+    the backlog past the budget (raises
+    :class:`repro.launch.resilience.OverloadError`, counted in
+    ``shed_overload``) — the caller decides whether to retry, degrade or
+    propagate. Requests never hang: every submitted id either comes back
+    from ``poll`` or from ``take_shed``.
     """
 
     def __init__(self, buckets: Sequence[int] = DEFAULT_BUCKETS,
-                 max_wait_s: float = 0.005):
+                 max_wait_s: float = 0.005,
+                 max_pending_images: Optional[int] = None):
         if not buckets:
             raise ValueError("need at least one bucket")
+        if max_pending_images is not None and max_pending_images < 1:
+            raise ValueError(
+                f"max_pending_images must be >= 1, got {max_pending_images}")
         self.buckets = tuple(sorted(buckets))
         self.max_wait_s = max_wait_s
+        self.max_pending_images = max_pending_images
         self._pending: List[_Pending] = []
+        self._shed: List[int] = []
         self._next_id = 0
+        self.shed_deadline = 0
+        self.shed_overload = 0
 
     def __len__(self) -> int:
         return len(self._pending)
@@ -208,19 +269,50 @@ class BucketBatcher:
     def pending_images(self) -> int:
         return sum(p.batch for p in self._pending)
 
-    def submit(self, batch: int, now: float) -> int:
-        """Enqueue a request of ``batch`` images; returns its id."""
+    def submit(self, batch: int, now: float,
+               deadline: Optional[float] = None) -> int:
+        """Enqueue a request of ``batch`` images; returns its id.
+        ``deadline`` (absolute, same clock as ``now``) marks the request
+        sheddable: if it is still pending when the deadline passes, the
+        next ``poll`` drops it instead of releasing it. Raises
+        :class:`~repro.launch.resilience.OverloadError` (without
+        enqueueing) when the backlog budget would be exceeded."""
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
+        if (self.max_pending_images is not None
+                and self.pending_images + batch > self.max_pending_images):
+            from .resilience import OverloadError
+            self.shed_overload += 1
+            raise OverloadError(
+                f"request of {batch} image(s) would push the backlog to "
+                f"{self.pending_images + batch} > budget "
+                f"{self.max_pending_images} — shed")
         rid = self._next_id
         self._next_id += 1
-        self._pending.append(_Pending(rid, batch, now))
+        self._pending.append(_Pending(rid, batch, now, deadline))
         return rid
+
+    def take_shed(self) -> List[int]:
+        """Drain and return the ids shed since the last call (deadline
+        expiries found by ``poll``). Overload-shed requests never get an
+        id — ``submit`` raises before enqueueing them."""
+        out, self._shed = self._shed, []
+        return out
 
     def poll(self, now: float, flush: bool = False
              ) -> List[Tuple[int, List[int]]]:
         """Batches to release at time ``now``. ``flush=True`` drains
-        everything regardless of deadline (shutdown / end of trace)."""
+        everything regardless of deadline (shutdown / end of trace).
+        Pending requests whose deadline has passed are shed first (even
+        under ``flush`` — serving them would only waste the bucket)."""
+        kept = []
+        for p in self._pending:
+            if p.deadline is not None and now > p.deadline:
+                self._shed.append(p.request_id)
+                self.shed_deadline += 1
+            else:
+                kept.append(p)
+        self._pending = kept
         out: List[Tuple[int, List[int]]] = []
         max_bucket = self.buckets[-1]
 

@@ -26,6 +26,27 @@ from ..accel.cycle_model import ConvLayerDims
 PyTree = Any
 
 
+class BindError(RuntimeError):
+    """Base of the bind-failure taxonomy: anything that stops
+    :func:`bind_execution` from producing a usable exec. The serving
+    resilience ladder (:mod:`repro.launch.resilience`) keys its recovery
+    on the subclass — transient failures retry with backoff, permanent
+    ones downgrade immediately."""
+
+
+class TransientBindError(BindError):
+    """A bind failure that may succeed on retry (resource pressure,
+    injected chaos, a racing invalidation) — the ladder retries it with
+    exponential backoff before downgrading."""
+
+
+class PermanentBindError(BindError, ValueError):
+    """A bind failure no retry can fix: the request violates the bind
+    contract (tracer weights, incompatible quant spec, ...). Also a
+    :class:`ValueError` so pre-taxonomy callers catching that keep
+    working. The ladder skips retries and downgrades one rung."""
+
+
 @dataclasses.dataclass(frozen=True)
 class ResNetConfig:
     stages: Tuple[int, ...] = (3, 3, 3)
@@ -564,7 +585,7 @@ def _bind_conv_layers(tree: PyTree, specs: PyTree, group_masks: PyTree,
         if not is_conv_weight(path, leaf):
             continue
         if isinstance(leaf, jax.core.Tracer):
-            raise ValueError(
+            raise PermanentBindError(
                 "sparse exec builders need concrete weights (plans are "
                 "host-side numpy) but got a tracer — build the "
                 "SparseConvExec outside jit and pass it via sparse=exec")
@@ -701,7 +722,7 @@ def bind_execution(
     spec = ExecSpec() if spec is None else spec
     if spec.folded:
         if quant_spec is not None:
-            raise ValueError(
+            raise PermanentBindError(
                 "folded binds calibrate per-cout scales per layer — a "
                 "global quant_spec would clip BN-scaled channels; it is "
                 "plain-exec only")
@@ -720,7 +741,7 @@ def bind_execution(
             relu = keys[-2] in ("conv0", "conv1")   # ReLU directly after BN
             quant = Q.QuantSpec.calibrate(w) if spec.quantized else None
             if out_q is not None and quant.act_scale != out_q.act_scale:
-                raise ValueError(
+                raise PermanentBindError(
                     f"streamed wire scale mismatch at {'/'.join(keys)}: "
                     f"layer ingests activation scale {quant.act_scale} but "
                     f"the wire emits {out_q.act_scale} — streaming needs a "
@@ -731,8 +752,9 @@ def bind_execution(
                                     out_quant=out_q)
     else:
         if quant_spec is not None and not spec.quantized:
-            raise ValueError("quant_spec without quantized=True would be "
-                             "silently ignored — pass quantized=True")
+            raise PermanentBindError(
+                "quant_spec without quantized=True would be "
+                "silently ignored — pass quantized=True")
         qspec = (quant_spec or Q.QuantSpec()) if spec.quantized else None
         tree = params
         weight_of = ((lambda l: Q.quantize(l, Q.Q2_5)) if spec.quantized

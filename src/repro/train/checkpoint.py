@@ -16,6 +16,8 @@ import shutil
 import signal
 import tempfile
 import time
+import warnings
+import zipfile
 from typing import Any, Callable, Optional
 
 import jax
@@ -24,6 +26,12 @@ import numpy as np
 PyTree = Any
 
 _SEP = "|"
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint directory exists but cannot be read back — truncated
+    arrays, unparseable manifest, or a manifest/payload count mismatch
+    (a partially-written or bit-rotted save)."""
 
 
 def _flatten(tree: PyTree) -> dict:
@@ -98,24 +106,91 @@ def all_steps(ckpt_dir: str):
     return sorted(out)
 
 
+def _step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:010d}")
+
+
+def verify_step(ckpt_dir: str, step: int) -> bool:
+    """True when ``step``'s checkpoint reads back intact: parseable
+    manifest, CRC-clean ``arrays.npz`` (catches truncation even when the
+    zip directory survived), and an array count matching the manifest.
+    The atomic-rename save makes corruption *unlikely*, not impossible —
+    a torn copy, full disk during an rsync, or bit rot still happen."""
+    path = _step_path(ckpt_dir, step)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            meta = json.load(f)
+        with zipfile.ZipFile(os.path.join(path, "arrays.npz")) as z:
+            if z.testzip() is not None:
+                return False
+            n = len(z.namelist())
+        n_meta = meta.get("n_arrays")
+        return n_meta is None or n == int(n_meta)
+    except Exception:
+        return False
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
-    steps = all_steps(ckpt_dir)
-    return max(steps) if steps else None
+    """Newest *readable* step — partially-written or corrupt checkpoints
+    are skipped (with a warning), falling back to the previous save, so a
+    crash mid-copy never wedges restart on an unreadable checkpoint."""
+    for s in reversed(all_steps(ckpt_dir)):
+        if verify_step(ckpt_dir, s):
+            return s
+        warnings.warn(f"skipping corrupt/partial checkpoint "
+                      f"{_step_path(ckpt_dir, s)!r} — falling back to an "
+                      "older step")
+    return None
+
+
+def _read_flat(ckpt_dir: str, step: Optional[int]) -> tuple:
+    """(flat dict, manifest) for ``step`` (default: newest readable)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no readable checkpoints in {ckpt_dir}")
+    elif not os.path.exists(os.path.join(_step_path(ckpt_dir, step),
+                                         "manifest.json")):
+        raise FileNotFoundError(f"no checkpoint for step {step} in {ckpt_dir}")
+    path = _step_path(ckpt_dir, step)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            meta = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+    except FileNotFoundError:
+        raise
+    except Exception as e:
+        raise CorruptCheckpointError(
+            f"checkpoint {path!r} is unreadable ({type(e).__name__}: {e}) — "
+            "partially written or corrupted on disk") from e
+    n_meta = meta.get("n_arrays")
+    if n_meta is not None and len(flat) != int(n_meta):
+        raise CorruptCheckpointError(
+            f"checkpoint {path!r} holds {len(flat)} arrays but its manifest "
+            f"promises {n_meta} — partially written save")
+    return flat, meta
+
+
+def load_flat(ckpt_dir: str, step: Optional[int] = None) -> tuple:
+    """Skeleton-free load: ``({path-key: np.ndarray}, manifest)`` for
+    ``step`` (default: the newest readable checkpoint — corrupt ones are
+    skipped with a warning). Keys are the ``_SEP``-joined tree paths the
+    save flattened to. For consumers that carry their own structure
+    (e.g. the serving snapshot) or want to inspect a checkpoint without
+    rebuilding the model."""
+    return _read_flat(ckpt_dir, step)
 
 
 def restore(ckpt_dir: str, skeleton: PyTree, step: Optional[int] = None,
             sharding_fn: Optional[Callable] = None) -> tuple:
     """Restore into ``skeleton``'s structure. ``sharding_fn(path, arr)`` may
     return a ``jax.sharding.Sharding`` to re-shard on load (elastic restart
-    onto a different mesh). Returns (tree, manifest)."""
-    step = latest_step(ckpt_dir) if step is None else step
-    if step is None:
-        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step:010d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        meta = json.load(f)
-    with np.load(os.path.join(path, "arrays.npz")) as z:
-        flat = {k: z[k] for k in z.files}
+    onto a different mesh). Returns (tree, manifest). With ``step=None``
+    corrupt/partial checkpoints are skipped (warned) in favor of the
+    newest readable one; an explicitly-requested corrupt step raises
+    :class:`CorruptCheckpointError`."""
+    flat, meta = _read_flat(ckpt_dir, step)
     tree = _unflatten_into(skeleton, flat)
     if sharding_fn is not None:
         def place(p, a):
@@ -127,10 +202,42 @@ def restore(ckpt_dir: str, skeleton: PyTree, step: Optional[int] = None,
     return tree, meta
 
 
+# signum -> {"fn": current save fn, "prev": handler we displaced}; module
+# state so repeat installs stay idempotent instead of stacking handlers
+_SIGNAL_SAVES: dict = {}
+
+
 def install_signal_save(fn: Callable[[], None], signals=(signal.SIGTERM, signal.SIGINT)):
-    """Emergency checkpoint on preemption (SIGTERM is what a cluster sends)."""
-    def handler(signum, frame):
-        fn()
-        raise SystemExit(128 + signum)
+    """Emergency checkpoint on preemption (SIGTERM is what a cluster sends).
+
+    Plays well with other handlers: whatever was installed before is
+    *chained* (called after the save) rather than silently displaced, and
+    repeat installs are idempotent — the newest ``fn`` replaces the old
+    one inside the single installed handler, so one signal triggers one
+    save, however many times a (re)started trainer called this."""
     for s in signals:
+        rec = _SIGNAL_SAVES.get(s)
+        if rec is not None:
+            rec["fn"] = fn              # idempotent: one handler, newest fn
+            continue
+        rec = {"fn": fn, "prev": signal.getsignal(s)}
+        _SIGNAL_SAVES[s] = rec
+
+        def handler(signum, frame, _rec=rec):
+            _rec["fn"]()
+            prev = _rec["prev"]
+            if callable(prev):          # chain a displaced python handler
+                prev(signum, frame)
+            raise SystemExit(128 + signum)
+
         signal.signal(s, handler)
+
+
+def uninstall_signal_save(signals=(signal.SIGTERM, signal.SIGINT)):
+    """Restore the handlers :func:`install_signal_save` displaced (tests,
+    or handing signal ownership back to an outer framework)."""
+    for s in signals:
+        rec = _SIGNAL_SAVES.pop(s, None)
+        if rec is not None:
+            signal.signal(s, rec["prev"] if rec["prev"] is not None
+                          else signal.SIG_DFL)

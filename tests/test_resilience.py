@@ -1,0 +1,515 @@
+"""Resilient serving: fault injection, deadlines + shedding, the
+graceful-degradation ladder, and crash recovery.
+
+Covers the ladder construction and the bounded-retry bind, the seeded
+:class:`FaultPlan` determinism, cache-entry quarantine mechanics, the
+server walking the ladder under injected bind failures / non-finite
+outputs (answers asserted bit-exact against clean reference servers
+pinned to the same rung — degraded, never wrong), mask-corruption
+detection + repair, deadline and admission-control shedding (counted,
+never hung), snapshot -> warm-restart of the bind-key state, the
+checkpoint robustness satellites (truncated saves skipped with a
+warning, signal-save chaining/idempotence), and ``simulate_trace``
+under a chaos plan.
+"""
+import dataclasses
+import os
+import signal
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (HAPMConfig, apply_masks, hapm_element_masks,
+                        hapm_epoch_update, hapm_init)
+from repro.launch.exec_cache import BucketBatcher, CacheEntry, ExecCache
+from repro.launch.resilience import (DeadlineExceeded, FaultPlan,
+                                     NonFiniteOutputError, OverloadError,
+                                     ServePolicy, degradation_ladder,
+                                     retry_bind, rung_name)
+from repro.launch.serve_cnn import CnnServer, simulate_trace
+from repro.models import cnn
+from repro.models.cnn import (BindError, PermanentBindError,
+                              TransientBindError)
+from repro.train import checkpoint as ckpt
+
+N_CU = 4
+
+
+def _tiny(target=0.5, seed=0):
+    cfg = cnn.ResNetConfig(stages=(1, 1), widths=(8, 16), image_size=16)
+    params, state = cnn.init(jax.random.PRNGKey(seed), cfg)
+    params = jax.tree_util.tree_map_with_path(
+        lambda p, l: l / jnp.std(l) * 0.1 if cnn.is_conv_weight(p, l) else l,
+        params)
+    specs = cnn.conv_group_specs(params, N_CU)
+    hcfg = HAPMConfig(target, 1)
+    st = hapm_epoch_update(hapm_init(specs, hcfg), specs, params, hcfg)
+    return cfg, apply_masks(params, hapm_element_masks(specs, st)), state
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return _tiny(0.5)
+
+
+def _x(n=2, seed=0):
+    return np.random.RandomState(seed).rand(n, 16, 16, 3).astype(np.float32)
+
+
+# ------------------------------------------------------ ladder + retries
+def test_degradation_ladder_shapes():
+    full = degradation_ladder(cnn.ExecSpec(quantized=True, folded=True,
+                                           streamed=True, n_cu=N_CU))
+    assert [rung_name(r) for r in full] == \
+        ["streamed", "quantized", "f32", "dense"]
+    # every intermediate rung is a valid spec; structure is preserved
+    for r in full[:-1]:
+        assert r.folded and r.n_cu == N_CU
+    assert full[-1] is None
+    assert [rung_name(r) for r in
+            degradation_ladder(cnn.ExecSpec(n_cu=N_CU))] == ["f32", "dense"]
+    assert [rung_name(r) for r in
+            degradation_ladder(cnn.ExecSpec(quantized=True))] == \
+        ["quantized", "f32", "dense"]
+
+
+def test_retry_bind_transient_then_success():
+    sleeps, attempts = [], []
+    calls = iter([TransientBindError("a"), TransientBindError("b"), "ok"])
+
+    def bind():
+        c = next(calls)
+        if isinstance(c, Exception):
+            raise c
+        return c
+
+    out = retry_bind(bind, retries=2, backoff_s=0.01, factor=3.0,
+                     sleep=sleeps.append, on_retry=attempts.append)
+    assert out == "ok"
+    assert sleeps == [0.01, 0.03]           # exponential backoff
+    assert attempts == [0, 1]
+
+
+def test_retry_bind_exhaustion_and_permanent():
+    def always(err):
+        def f():
+            raise err("nope")
+        return f
+    with pytest.raises(TransientBindError):
+        retry_bind(always(TransientBindError), retries=1, sleep=lambda s: None)
+    # permanent errors never retry — and stay catchable as ValueError
+    # (the pre-taxonomy contract of the bind path)
+    sleeps = []
+    with pytest.raises(ValueError):
+        retry_bind(always(PermanentBindError), retries=5, sleep=sleeps.append)
+    assert sleeps == []
+    assert issubclass(PermanentBindError, BindError)
+    assert issubclass(TransientBindError, BindError)
+
+
+def test_serve_policy_validation():
+    with pytest.raises(ValueError, match="overload_action"):
+        ServePolicy(overload_action="panic")
+    with pytest.raises(ValueError, match="max_bind_retries"):
+        ServePolicy(max_bind_retries=-1)
+
+
+# ------------------------------------------------------------- FaultPlan
+def test_fault_plan_is_seeded_and_deterministic():
+    def run(seed):
+        fp = FaultPlan(seed=seed, bind_fail_rate=0.5, sleep=lambda s: None)
+        hits = []
+        for i in range(20):
+            try:
+                fp.on_bind(None)
+                hits.append(0)
+            except TransientBindError:
+                hits.append(1)
+        return hits, fp.injected["bind_fail"]
+    a, na = run(7)
+    b, nb = run(7)
+    c, _ = run(8)
+    assert a == b and na == nb > 0
+    assert a != c                           # the seed drives the draw
+
+
+def test_fault_plan_schedules_and_cap():
+    fp = FaultPlan(bind_fail_calls=(1,), nonfinite_calls=(0,), max_faults=1)
+    fp.on_bind(None)                        # call 0: clean
+    y = fp.on_output(jnp.zeros((2, 3)))     # fires: one NaN planted
+    assert not bool(np.isfinite(np.asarray(y)).all())
+    fp.on_bind(None)                        # call 1 scheduled, but capped
+    assert fp.total_injected == 1
+    assert fp.record == [("output", 0, "nonfinite")]
+
+
+def test_fault_plan_mask_corruption_flips_one_bit(tiny):
+    cfg, pruned, state = tiny
+    masks = cnn.derive_group_masks(pruned, N_CU)
+    fp = FaultPlan(mask_corrupt_calls=(0,))
+    seen = fp.on_masks(masks)
+    assert seen is not masks
+    diff = sum(int(np.sum(seen[k] != masks[k])) for k in masks)
+    assert diff == 1
+    assert fp.on_masks(masks) is masks      # call 1: clean, same object
+
+
+# ------------------------------------------------------------ quarantine
+def test_exec_cache_quarantine_mechanics():
+    cache = ExecCache(capacity=4)
+    key = ("a", "m", "s")
+    cache.put(key + (1,), CacheEntry(exec_=None, fn=None, bucket=1))
+    assert cache.quarantine(key) == 1       # evicts the poisoned entry
+    assert cache.is_quarantined(key)
+    assert cache.get(key + (1,)) is None    # miss, never a poisoned hit
+    with pytest.raises(RuntimeError, match="quarantined"):
+        cache.put(key + (1,), CacheEntry(exec_=None, fn=None, bucket=1))
+    assert cache.shared_exec(key) is None
+    assert cache.stats()["quarantined"] == 1
+    other = ("a", "m2", "s")
+    cache.put(other + (1,), CacheEntry(exec_=None, fn=None, bucket=1))
+    assert cache.get(other + (1,)) is not None   # other binds unaffected
+    cache.clear_quarantine()
+    assert not cache.is_quarantined(key)
+
+
+# ------------------------------------------- the ladder through a server
+def test_bind_failures_walk_ladder_bit_exactly(tiny):
+    cfg, pruned, state = tiny
+    spec = cnn.ExecSpec(quantized=True, n_cu=N_CU)
+    faults = FaultPlan(bind_fail_calls=(0, 1))   # exhaust 1 retry at rung 0
+    srv = CnnServer(pruned, state, cfg, spec=spec, buckets=(1, 2),
+                    policy=ServePolicy(max_bind_retries=1, bind_backoff_s=0.0),
+                    faults=faults)
+    x = _x(2)
+    y = np.asarray(srv.infer(x))
+    assert srv.level == 1 and srv.stats()["rung"] == "f32"
+    assert srv.resilience["bind_retries"] == 1
+    assert srv.resilience["bind_failures"] == 1
+    assert srv.resilience["downgrades"] == 1
+    assert srv.degrade_log and "bind failed" in srv.degrade_log[0]
+    # degraded, not wrong: bit-exact vs a clean server pinned to the rung
+    ref = CnnServer(pruned, state, cfg, spec=spec, buckets=(1, 2))
+    ref.force_level(srv.last_request_level)
+    assert bool((np.asarray(ref.infer(x)) == y).all())
+    # sticky: the next request starts at the degraded rung, no new faults
+    np.asarray(srv.infer(x))
+    assert faults.injected["bind_fail"] == 2
+
+
+def test_permanent_bind_error_skips_retries(tiny):
+    cfg, pruned, state = tiny
+    faults = FaultPlan(bind_fail_calls=(0,), bind_fail_permanent=True)
+    srv = CnnServer(pruned, state, cfg, spec=cnn.ExecSpec(n_cu=N_CU),
+                    buckets=(1,), faults=faults)
+    y = np.asarray(srv.infer(_x(1)))
+    assert np.isfinite(y).all()
+    assert srv.resilience["bind_retries"] == 0    # straight to the ladder
+    assert srv.resilience["bind_failures"] == 1
+    assert srv.stats()["rung"] == "dense"
+
+
+def test_allow_degrade_false_raises_after_retries(tiny):
+    cfg, pruned, state = tiny
+    faults = FaultPlan(bind_fail_rate=1.0, sleep=lambda s: None)
+    srv = CnnServer(pruned, state, cfg, spec=cnn.ExecSpec(n_cu=N_CU),
+                    buckets=(1,),
+                    policy=ServePolicy(allow_degrade=False, max_bind_retries=1,
+                                       bind_backoff_s=0.0),
+                    faults=faults)
+    with pytest.raises(TransientBindError):
+        srv.infer(_x(1))
+    assert srv.resilience["bind_failures"] == 1
+
+
+def test_nonfinite_guardrail_quarantines_and_degrades(tiny):
+    cfg, pruned, state = tiny
+    spec = cnn.ExecSpec(quantized=True, n_cu=N_CU)
+    faults = FaultPlan(nonfinite_calls=(0,))
+    srv = CnnServer(pruned, state, cfg, spec=spec, buckets=(1, 2),
+                    faults=faults)
+    x = _x(2, seed=1)
+    y = np.asarray(srv.infer(x))
+    assert np.isfinite(y).all()             # never returns the NaN answer
+    assert srv.resilience["nonfinite_caught"] == 1
+    assert srv.cache.is_quarantined(srv.bind_key)
+    assert srv.stats()["rung"] == "f32"
+    ref = CnnServer(pruned, state, cfg, spec=spec, buckets=(1, 2))
+    ref.force_level(1)
+    assert bool((np.asarray(ref.infer(x)) == y).all())
+    # a mask update lifts the quarantine and resets the ladder
+    srv.update_masks(_tiny(0.75)[1])
+    assert srv.level == 0
+    assert not srv.cache.is_quarantined(srv.bind_key)
+
+
+def test_nonfinite_on_every_rung_refuses_to_answer(tiny):
+    cfg, pruned, state = tiny
+    faults = FaultPlan(nonfinite_rate=1.0)
+    srv = CnnServer(pruned, state, cfg, spec=cnn.ExecSpec(n_cu=N_CU),
+                    buckets=(1,), faults=faults)
+    with pytest.raises(NonFiniteOutputError, match="dense"):
+        srv.infer(_x(1))
+
+
+# --------------------------------------------- input validation contract
+def test_infer_validates_shape_and_dtype(tiny):
+    cfg, pruned, state = tiny
+    srv = CnnServer(pruned, state, cfg, spec=cnn.ExecSpec(n_cu=N_CU),
+                    buckets=(1,))
+    with pytest.raises(ValueError, match=r"\(B, H, W, C\)"):
+        srv.infer(np.zeros((2, 8, 8, 3), np.float32))      # wrong spatial
+    with pytest.raises(ValueError, match=r"\(B, 16, 16, 3\)"):
+        srv.infer(np.zeros((16, 16, 3), np.float32))       # wrong rank
+    with pytest.raises(ValueError, match="floating-point"):
+        srv.infer(np.zeros((1, 16, 16, 3), np.int32))      # wrong dtype
+    out = srv.infer(jnp.zeros((0, 16, 16, 3), jnp.float32))
+    assert out.shape == (0, cfg.num_classes)               # empty still ok
+
+
+# --------------------------------------------------- deadlines + admission
+def test_deadline_sheds_instead_of_hanging(tiny):
+    cfg, pruned, state = tiny
+    srv = CnnServer(pruned, state, cfg, spec=cnn.ExecSpec(n_cu=N_CU),
+                    buckets=(1,))
+    with pytest.raises(DeadlineExceeded, match="unserved"):
+        srv.infer(_x(1), deadline_s=-1.0)
+    assert srv.resilience["deadline_timeouts"] == 1
+    # policy default applies when the call passes none
+    srv2 = CnnServer(pruned, state, cfg, spec=cnn.ExecSpec(n_cu=N_CU),
+                     buckets=(1,),
+                     policy=ServePolicy(default_deadline_s=-1.0))
+    with pytest.raises(DeadlineExceeded):
+        srv2.infer(_x(1))
+    assert np.asarray(srv2.infer(_x(1), deadline_s=60.0)).shape == (1, 10)
+
+
+def test_admission_control_shed_and_degrade(tiny):
+    cfg, pruned, state = tiny
+    shed = CnnServer(pruned, state, cfg, spec=cnn.ExecSpec(n_cu=N_CU),
+                     buckets=(1, 2),
+                     policy=ServePolicy(max_request_images=1,
+                                        overload_action="shed"))
+    with pytest.raises(OverloadError, match="admission budget"):
+        shed.infer(_x(2))
+    assert shed.resilience["shed_overload"] == 1
+    deg = CnnServer(pruned, state, cfg, spec=cnn.ExecSpec(n_cu=N_CU),
+                    buckets=(1, 2),
+                    policy=ServePolicy(max_request_images=1,
+                                       overload_action="degrade"))
+    x = _x(2, seed=2)
+    y = np.asarray(deg.infer(x))
+    assert deg.resilience["overload_downgrades"] == 1
+    assert deg.last_request_level == 1 and deg.level == 0  # per-request only
+    ref = CnnServer(pruned, state, cfg, spec=cnn.ExecSpec(n_cu=N_CU),
+                    buckets=(1, 2))
+    ref.force_level(1)
+    assert bool((np.asarray(ref.infer(x)) == y).all())
+
+
+def test_batcher_deadline_and_overload_shedding():
+    b = BucketBatcher((1, 4), max_wait_s=0.010, max_pending_images=4)
+    r0 = b.submit(2, now=0.0, deadline=0.005)
+    with pytest.raises(OverloadError, match="budget"):
+        b.submit(3, now=0.001)              # 2 + 3 = 5 > 4: refused
+    assert b.shed_overload == 1
+    assert b.pending_images == 2
+    b.submit(2, now=0.001)
+    # r0's deadline passes before the flush: shed, the later request serves
+    out = b.poll(0.011, flush=True)
+    assert b.take_shed() == [r0]
+    assert b.shed_deadline == 1
+    served = [rid for _, ids in out for rid in ids]
+    assert r0 not in served and len(served) == 1
+
+
+# ------------------------------------------------- mask corruption repair
+def test_mask_corruption_detected_and_repaired(tiny):
+    cfg, pruned, state = tiny
+    faults = FaultPlan(mask_corrupt_calls=(0,))
+    srv = CnnServer(pruned, state, cfg, spec=cnn.ExecSpec(n_cu=N_CU),
+                    buckets=(1,), faults=faults)
+    clean = CnnServer(pruned, state, cfg, spec=cnn.ExecSpec(n_cu=N_CU),
+                      buckets=(1,))
+    assert faults.injected["mask_corrupt"] == 1
+    assert srv.resilience["mask_repairs"] == 1
+    assert srv.mask_fp == clean.mask_fp     # repaired, not served corrupt
+    # with validation off the corruption leaks into the fingerprint
+    loose = CnnServer(pruned, state, cfg, spec=cnn.ExecSpec(n_cu=N_CU),
+                      buckets=(1,), policy=ServePolicy(validate_masks=False),
+                      faults=FaultPlan(mask_corrupt_calls=(0,)))
+    assert loose.mask_fp != clean.mask_fp
+
+
+# --------------------------------------------- snapshot -> warm restart
+def test_snapshot_warm_restart_and_mismatch_fallback(tiny, tmp_path):
+    cfg, pruned, state = tiny
+    spec = cnn.ExecSpec(quantized=True, n_cu=N_CU)
+    srv = CnnServer(pruned, state, cfg, spec=spec, buckets=(1,))
+    path = srv.snapshot(str(tmp_path), step=5)
+    assert os.path.isdir(path)
+    warm = CnnServer(pruned, state, cfg, spec=spec, buckets=(1,),
+                     snapshot_dir=str(tmp_path))
+    assert warm.mask_fp == srv.mask_fp
+    assert warm.group_masks.keys() == srv.group_masks.keys()
+    x = _x(1, seed=3)
+    assert bool((np.asarray(warm.infer(x)) == np.asarray(srv.infer(x))).all())
+    # a snapshot for a different spec is refused (derive fresh + warn)
+    with pytest.warns(UserWarning, match="does not match"):
+        other = CnnServer(pruned, state, cfg, spec=cnn.ExecSpec(n_cu=N_CU),
+                          buckets=(1,), snapshot_dir=str(tmp_path))
+    assert other.mask_fp == CnnServer(pruned, state, cfg,
+                                      spec=cnn.ExecSpec(n_cu=N_CU),
+                                      buckets=(1,)).mask_fp
+    # an empty dir warns and derives fresh
+    with pytest.warns(UserWarning, match="no server snapshot"):
+        CnnServer(pruned, state, cfg, spec=spec, buckets=(1,),
+                  snapshot_dir=str(tmp_path / "nowhere"))
+
+
+def test_snapshot_fingerprint_integrity_check(tiny, tmp_path):
+    cfg, pruned, state = tiny
+    spec = cnn.ExecSpec(n_cu=N_CU)
+    srv = CnnServer(pruned, state, cfg, spec=spec, buckets=(1,))
+    srv.snapshot(str(tmp_path), step=1)
+    # corrupt the stored fingerprint: restore must fall back to deriving
+    import json
+    man = os.path.join(str(tmp_path), "step_0000000001", "manifest.json")
+    with open(man) as f:
+        meta = json.load(f)
+    meta["mask_fp"] = "deadbeef"
+    with open(man, "w") as f:
+        json.dump(meta, f)
+    with pytest.warns(UserWarning, match="integrity"):
+        warm = CnnServer(pruned, state, cfg, spec=spec, buckets=(1,),
+                         snapshot_dir=str(tmp_path))
+    assert warm.mask_fp == srv.mask_fp      # derived fresh, still correct
+    assert warm.resilience["mask_repairs"] == 1
+
+
+# ------------------------------------------- checkpoint robustness (sat.)
+def test_truncated_checkpoint_skipped_with_warning(tmp_path):
+    d = str(tmp_path)
+    tree = {"w": np.arange(12.0).reshape(3, 4)}
+    ckpt.save(d, 1, tree)
+    ckpt.save(d, 2, {"w": tree["w"] + 1})
+    npz = os.path.join(d, "step_0000000002", "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(os.path.getsize(npz) // 2)
+    assert not ckpt.verify_step(d, 2)
+    assert ckpt.verify_step(d, 1)
+    with pytest.warns(UserWarning, match="corrupt"):
+        assert ckpt.latest_step(d) == 1     # falls back past the bad save
+    with pytest.warns(UserWarning, match="corrupt"):
+        got, meta = ckpt.restore(d, {"w": np.zeros((3, 4))})
+    assert meta["step"] == 1
+    np.testing.assert_array_equal(got["w"], tree["w"])
+    # explicitly asking for the corrupt step is an error, not a fallback
+    with pytest.raises(ckpt.CorruptCheckpointError):
+        ckpt.load_flat(d, step=2)
+    # unparseable manifest is equally skipped
+    ckpt.save(d, 3, tree)
+    with open(os.path.join(d, "step_0000000003", "manifest.json"), "w") as f:
+        f.write("{not json")
+    with pytest.warns(UserWarning, match="corrupt"):
+        assert ckpt.latest_step(d) == 1
+
+
+def test_load_flat_roundtrip(tmp_path):
+    d = str(tmp_path)
+    tree = {"a": {"b": np.ones((2, 2))}, "c": np.zeros(3)}
+    ckpt.save(d, 7, tree, extra_meta={"kind": "t"})
+    flat, meta = ckpt.load_flat(d)
+    assert sorted(flat) == ["a|b", "c"]
+    assert meta["kind"] == "t" and meta["step"] == 7
+    with pytest.raises(FileNotFoundError):
+        ckpt.load_flat(str(tmp_path / "empty"))
+
+
+def test_install_signal_save_chains_and_is_idempotent():
+    calls = []
+    sig = signal.SIGUSR2
+    prev = signal.getsignal(sig)
+    try:
+        signal.signal(sig, lambda s, f: calls.append("prev"))
+        ckpt.install_signal_save(lambda: calls.append("old"), signals=(sig,))
+        ckpt.install_signal_save(lambda: calls.append("new"), signals=(sig,))
+        with pytest.raises(SystemExit) as e:
+            signal.raise_signal(sig)
+        # one save (the newest fn), the displaced handler chained after
+        assert calls == ["new", "prev"]
+        assert e.value.code == 128 + int(sig)
+    finally:
+        ckpt.uninstall_signal_save(signals=(sig,))
+        signal.signal(sig, prev)
+    assert sig not in ckpt._SIGNAL_SAVES
+
+
+# ----------------------------------------- simulate_trace under a chaos
+def test_simulate_trace_under_faults_matches_unfaulted_reference(tiny):
+    cfg, pruned, state = tiny
+    pruned75 = _tiny(0.75)[1]
+    spec = cnn.ExecSpec(quantized=True, n_cu=N_CU)
+    faults = FaultPlan(bind_fail_calls=(0,),      # one bind failure
+                       mask_corrupt_calls=(1,))   # mid-trace corruption
+    srv = CnnServer(pruned, state, cfg, spec=spec, buckets=(1, 4),
+                    policy=ServePolicy(max_bind_retries=0),
+                    faults=faults)
+    imgs, fps = {}, {}
+
+    def images_fn(rid, n):
+        if rid not in imgs:
+            imgs[rid] = _x(n, seed=100 + rid)
+            fps[rid] = srv.mask_fp
+        return imgs[rid]
+
+    batcher = BucketBatcher((1, 4), max_wait_s=0.004,
+                            max_pending_images=4)
+    # every served request is 2 images so the per-request reference runs
+    # at the same bucket (4) the chaos batch ran at — bit-exactness is
+    # per-rung AND per-program; cross-bucket comparison is not part of
+    # the contract
+    trace = [(0.000, 2), (0.001, 2),        # fills bucket 4 -> served
+             (0.010, 3), (0.0101, 3),       # second pushes 6 > 4: overload
+             (1.000, 2), (1.001, 2),        # served on the updated masks
+             (1.010, 2)]                    # isolated: deadline-shed
+    events = [(0.5, lambda: srv.update_masks(pruned75))]
+    sim = simulate_trace(batcher, trace, lambda b: 0.002, server=srv,
+                         images_fn=images_fn, deadline_s=0.003,
+                         events=events)
+    # the trace completes and every request is accounted for
+    assert sim["requests"] + sim["shed"] == sim["submitted"] == 7
+    assert sim["shed_overload"] == 1 and sim["shed_deadline"] >= 1
+    assert sim["requests"] >= 4
+    # the injected faults actually happened and were absorbed
+    assert faults.injected["bind_fail"] == 1
+    assert sim["resilience"]["bind_failures"] == 1
+    assert sim["resilience"]["downgrades"] >= 1
+    assert sim["resilience"]["mask_repairs"] == 1
+    # every completed request bit-exact vs an un-faulted reference server
+    # at the rung (and weights) it was served under
+    refs = {}
+    for rid, y in sim["outputs"].items():
+        key = (fps[rid], sim["rungs"][rid])
+        if key not in refs:
+            # srv.mask_fp is the post-update fingerprint: requests served
+            # after the event carry it, earlier ones carry the 0.5 prune's
+            weights = pruned75 if fps[rid] == srv.mask_fp else pruned
+            r = CnnServer(weights, state, cfg, spec=spec, buckets=(1, 4))
+            assert r.mask_fp == fps[rid]
+            r.force_level(sim["rungs"][rid])
+            refs[key] = r
+        assert bool((np.asarray(refs[key].infer(imgs[rid])) == y).all()), rid
+
+
+def test_simulate_trace_backward_compatible_keys():
+    b = BucketBatcher((1, 4), max_wait_s=0.005)
+    sim = simulate_trace(b, [(0.0, 2), (0.0, 2)], lambda bucket: 0.001)
+    for k in ("requests", "images", "p50_s", "p99_s", "releases",
+              "mean_bucket_fill"):
+        assert k in sim
+    assert sim["requests"] == 2 and sim["shed"] == 0
+    assert "outputs" not in sim             # only with a server attached
