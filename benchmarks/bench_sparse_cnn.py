@@ -48,6 +48,20 @@ Execution columns:
   (``apply_folded(wire_quantize=True)``) is *bit-exact on codes*
   (asserted == 0), and ``streamed_hbm_ratio_vs_f32`` prices the
   1-byte-operand + 1-byte-output contract (gated ≤ 0.28× at 50 %).
+- ``dsb_*`` / ``wall_dsb*_ms`` — **dual-sided sparsity**
+  (``ExecSpec(activation_dsb=True)``): the implicit kernel skips the
+  gather + MXU pass of every all-zero activation window (exact int8
+  codes on the streamed wire). Measured per row on a designated workload
+  layer fed a structured ReLU-sparse activation (every other K-tile's
+  channel block dead — the pattern a structurally-pruned upstream layer
+  emits — plus elementwise post-ReLU zeros): ``dsb_skip_frac`` (the
+  kernel-side skip counter, gated ≥ 0.3 at 50 %), wall clock vs the
+  non-skip twin (``dsb_kernel_speedup``, gated ≥ 1.2× at 50 %),
+  bit-exactness (``dsb_max_err_vs_noskip``, asserted == 0 every row),
+  and the dense-activation non-regression (``dsb_dense_act_ratio``,
+  gated ≥ 0.95: a dense input pays only the any-nonzero reduction).
+  ``dsb_skip_frac_e2e`` is the served end-to-end skip on a half-dead
+  frame through ``measure_dsb_skip``.
 
 ``schedule_steps_live`` is the layout-independent paper granularity,
 asserted equal to the cycle model's DSB step count AND identical across
@@ -280,6 +294,50 @@ def run(args=None) -> dict:
         assert bool(jnp.all(s_outs["implicit"] == s_outs["materializing"]))
         err_s_f32 = float(jnp.max(jnp.abs(s_outs["implicit"] - ref)))
 
+        # ---- dual-sided sparsity: activation-DSB on the streamed wire ----
+        # The skip twin of the streamed implicit exec: identical bind plus
+        # @pl.when branches around the gather+MXU pass of every all-zero
+        # activation window (exact int8 codes — post-ReLU zeros are exact
+        # on the wire, so skipping is bit-free). Measured on a designated
+        # workload layer fed a *structured* ReLU-sparse activation: every
+        # other K-tile's channel block killed (the pattern a structurally
+        # pruned upstream layer emits — dead couts are exact zero codes)
+        # plus ~30 % elementwise post-ReLU zeros, at a batch sized so the
+        # kernel (not dispatch overhead) dominates the wall clock.
+        d_exec = fbind(streamed=True, implicit=True, activation_dsb=True)
+        DSB_LAYER = ("s2b0", "conv1", "w")     # 32 -> 64, stride 2, 8x8 in
+        d_conv = d_exec.table[DSB_LAYER]
+        s_conv = s_execs["implicit"].table[DSB_LAYER]
+        dsb_stride, dsb_batch, dsb_cin = 2, 16, cfg.widths[1]
+        cpk = d_conv.layout.implicit_geometry()["cpk"]
+        drng = np.random.RandomState(7)
+        xa = np.abs(drng.randn(dsb_batch, 8, 8, dsb_cin).astype(np.float32))
+        xa[drng.rand(*xa.shape) < 0.3] = 0.0        # elementwise ReLU zeros
+        for c0 in range(0, dsb_cin, 2 * cpk):
+            xa[..., c0:c0 + cpk] = 0.0              # every other K-tile dead
+        xa = jnp.asarray(xa)
+        xa_dense = jnp.asarray(np.abs(
+            np.random.RandomState(8).randn(*xa.shape)).astype(np.float32) + 0.1)
+        y_dsb, dsb_stats = d_conv.skip_counts(xa, stride=dsb_stride)
+        dsb_skip_frac = (dsb_stats["skipped_steps"]
+                         / max(dsb_stats["live_steps"], 1))
+        err_dsb = float(jnp.max(jnp.abs(
+            y_dsb.astype(jnp.int32)
+            - s_conv(xa, stride=dsb_stride).astype(jnp.int32)))) \
+            if dsb_stats["live_steps"] else 0.0
+        assert err_dsb == 0.0, \
+            f"activation-DSB diverged from the non-skip kernel at " \
+            f"{target}: {err_dsb}"
+        _dl = lambda fn: (lambda xx: (fn(xx, stride=dsb_stride),))
+        _, t_dsb = _timed(_dl(d_conv), xa)
+        _, t_noskip = _timed(_dl(s_conv), xa)
+        _, t_dsb_d = _timed(_dl(d_conv), xa_dense)
+        _, t_noskip_d = _timed(_dl(s_conv), xa_dense)
+        # end-to-end served skip on a ReLU-sparse frame (dead bottom half)
+        x_relu = np.array(x)
+        x_relu[:, cfg.image_size // 2:] = 0.0
+        dsb_e2e = d_exec.measure_dsb_skip(folded_t, jnp.asarray(x_relu), cfg)
+
         rep = simulate(pruned, state, cfg, accel)
         assert (rep.schedule_steps_live, rep.schedule_steps_total) == \
             (live_groups, total_groups), "cycle-model step accounting drifted"
@@ -341,6 +399,20 @@ def run(args=None) -> dict:
             "streamed_max_err_vs_f32": err_s_f32,
             "hbm_bytes_moved_streamed": s_hbm,
             "streamed_hbm_ratio_vs_f32": s_hbm / hbm_imp,
+            # dual-sided sparsity: activation-DSB skip on the streamed
+            # wire, measured on the designated workload layer (ReLU-sparse
+            # input) and end-to-end on a half-dead frame
+            "dsb_skip_frac": dsb_skip_frac,
+            "dsb_skipped_steps": dsb_stats["skipped_steps"],
+            "dsb_live_steps": dsb_stats["live_steps"],
+            "wall_dsb_ms": t_dsb * 1e3,
+            "wall_noskip_ms": t_noskip * 1e3,
+            "dsb_kernel_speedup": t_noskip / t_dsb,
+            "wall_dsb_dense_act_ms": t_dsb_d * 1e3,
+            "wall_noskip_dense_act_ms": t_noskip_d * 1e3,
+            "dsb_dense_act_ratio": t_noskip_d / t_dsb_d,
+            "dsb_max_err_vs_noskip": err_dsb,
+            "dsb_skip_frac_e2e": dsb_e2e["dsb_skip_frac"],
             # M-padding-aware MAC utilization of the dispatched tiles
             "padded_mac_utilization": imp_rep_b["padded_mac_utilization"],
             "padded_mac_utilization_b1": util_b1,
@@ -376,6 +448,12 @@ def run(args=None) -> dict:
               f"{walls['s_implicit']*1e3:>7.2f} "
               f"{row['streamed_hbm_ratio_vs_f32']:>8.2f} {util_b1:>8.3f} "
               f"{row['max_err_vs_dense']:>9.2e}")
+        print(f"{'':>7} dual-sided: skip {dsb_skip_frac:.2f} "
+              f"({dsb_stats['skipped_steps']}/{dsb_stats['live_steps']}), "
+              f"kernel {t_noskip * 1e3:.2f} -> {t_dsb * 1e3:.2f} ms "
+              f"({row['dsb_kernel_speedup']:.2f}x), dense-act ratio "
+              f"{row['dsb_dense_act_ratio']:.2f}, e2e skip "
+              f"{row['dsb_skip_frac_e2e']:.3f}, err {err_dsb:.1f}")
         assert row["max_err_vs_dense"] < 1e-4, \
             f"sparse path diverged from dense at {target}"
         if target == 0.0:
@@ -419,6 +497,14 @@ def run(args=None) -> dict:
     assert at50["streamed_hbm_ratio_vs_f32"] <= 0.28, at50
     assert all(r["streamed_max_err_vs_quantized"] == 0.0 for r in rows)
     assert at50["streamed_max_err_vs_f32"] <= 1.0, at50
+    # dual-sided sparsity's whole point: on a ReLU-sparse activation the
+    # kernel elides >= 30 % of its MXU passes and is measurably faster,
+    # bit-exactly (asserted == 0 per row), while a dense activation pays
+    # at most the per-window any-nonzero reduction (ratio >= 0.95)
+    assert all(r["dsb_max_err_vs_noskip"] == 0.0 for r in rows)
+    assert at50["dsb_skip_frac"] >= 0.3, at50
+    assert at50["dsb_kernel_speedup"] >= 1.2, at50
+    assert at50["dsb_dense_act_ratio"] >= 0.95, at50
 
     # ---- training through the kernels at the 50 % operating point -------
     # one SGD-style fwd+bwd step, dense lax.conv vs the trainable sparse

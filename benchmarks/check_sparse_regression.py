@@ -41,6 +41,19 @@ submitted request served or counted as shed (never hung), at least
 three distinct fault kinds actually injected, a bounded shed rate
 (<= 0.5), and a fingerprint-verified snapshot warm restart.
 
+With ``--require-dsb`` the bench's dual-sided-sparsity columns are
+additionally gated — absolute contracts on the 50 % row:
+``dsb_max_err_vs_noskip`` must be *exactly* zero (skipping an all-zero
+activation window elides an MXU pass whose contribution is exactly zero,
+so skip-on either reproduces the non-skip kernel bitwise or it is
+wrong), ``dsb_skip_frac`` must clear 0.3 on the bench's ReLU-sparse
+input (the kernel-side skip counter — if it reads zero the skip is dead
+code), the skip-vs-non-skip kernel wall ratio must clear 1.2× (machine
+speed cancels), and the dense-activation ratio must clear 0.95 (a dense
+input pays at most the any-nonzero reduction, never a real slowdown).
+The skip fraction and speedup also join the baseline ``GATES`` so drift
+above the floors still can't regress silently.
+
 With ``--require-training`` the bench's training columns (the 50 % row's
 ``train_step_*`` / ``grad_parity_max_err`` / ``pruned_group_grad_max``)
 are additionally gated: gradient parity vs the dense path is an absolute
@@ -89,11 +102,18 @@ GATES = {
     # (deterministic; --require-streaming additionally hard-floors it at
     # 0.28 and the wire parity at exactly zero)
     "streamed_hbm_ratio_vs_f32": "max",
+    # dual-sided sparsity: the kernel-side skip counter on the bench's
+    # seeded ReLU-sparse input (deterministic given the config) and the
+    # skip-vs-non-skip kernel wall ratio (--require-dsb additionally
+    # hard-floors both, plus exactness == 0 and the dense-act ratio)
+    "dsb_skip_frac": "min",
+    "dsb_kernel_speedup": "min",
 }
 # timing-based gates may drop to this fraction of baseline before failing
 # (interpret-mode kernel ratios wobble ~10-20 % across runs/machines);
 # the bench itself asserts the hard >=1.3x floor when it regenerates
-WALL_KEYS = {"implicit_vs_materializing_wallclock_speedup"}
+WALL_KEYS = {"implicit_vs_materializing_wallclock_speedup",
+             "dsb_kernel_speedup"}
 WALL_SLACK = 0.7
 # float-error gates get multiplicative headroom: the int8 side is exact
 # integer arithmetic, but the f32 reference it is compared against can
@@ -103,6 +123,11 @@ ERR_SLACK = 1.5
 # streaming gates: absolute contracts, no baseline file needed
 STREAMED_HBM_RATIO_MAX = 0.28       # acceptance ceiling (contract prices 0.25)
 STREAMED_WIRE_ERR_MAX = 0.0         # in-epilogue requantize: bitwise or wrong
+# dual-sided sparsity gates: absolute contracts on the 50 % row
+DSB_SKIP_FRAC_MIN = 0.3             # ReLU-sparse input: skip >= 30 % of passes
+DSB_SPEEDUP_MIN = 1.2               # skip vs non-skip kernel wall (same machine)
+DSB_DENSE_ACT_RATIO_MIN = 0.95      # dense activations must not pay for the skip
+DSB_EXACT_ERR_MAX = 0.0             # skip-on == skip-off: bitwise or wrong
 # resilience gates: absolute contracts over the chaos row, baseline-free
 CHAOS_MIN_FAULT_KINDS = 3           # the scenario must actually inject chaos
 CHAOS_SHED_RATE_MAX = 0.5           # bounded shedding, never wholesale refusal
@@ -209,6 +234,33 @@ def check_resilience() -> list:
     return failures
 
 
+def check_dsb(row: dict) -> list:
+    """Gate the 50 %-row dual-sided-sparsity columns; returns failures.
+
+    A missing column fails too (bench freshness: an artifact produced by
+    a pre-DSB bench has nothing to gate and must be regenerated)."""
+    failures = []
+    checks = (
+        ("dsb_max_err_vs_noskip", DSB_EXACT_ERR_MAX, "<="),
+        ("dsb_skip_frac", DSB_SKIP_FRAC_MIN, ">="),
+        ("dsb_kernel_speedup", DSB_SPEEDUP_MIN, ">="),
+        ("dsb_dense_act_ratio", DSB_DENSE_ACT_RATIO_MIN, ">="),
+    )
+    for key, bound, op in checks:
+        cur = row.get(key)
+        if cur is None:
+            bad = True
+        elif op == ">=":
+            bad = cur < bound - TOL
+        else:
+            bad = cur > bound + TOL
+        print(f"  {key:>44}: {cur if cur is not None else 'MISSING'} "
+              f"({op} {bound}) {'REGRESSED' if bad else 'ok'}")
+        if bad:
+            failures.append(key)
+    return failures
+
+
 def check_training(row: dict, baseline: dict) -> list:
     """Gate the 50 %-row training columns; returns failures."""
     failures = []
@@ -248,6 +300,10 @@ def main(argv=None) -> int:
     ap.add_argument("--require-streaming", action="store_true",
                     help="also hard-floor the bench's int8-streaming "
                          "columns (HBM ratio <= 0.28, wire parity == 0)")
+    ap.add_argument("--require-dsb", action="store_true",
+                    help="also hard-floor the bench's dual-sided-sparsity "
+                         "columns (skip frac >= 0.3, kernel speedup >= 1.2x, "
+                         "dense-act ratio >= 0.95, exactness == 0)")
     ap.add_argument("--require-training", action="store_true",
                     help="also gate the bench's training columns (grad "
                          "parity, pruned-group grads, train-step ratio)")
@@ -303,6 +359,8 @@ def main(argv=None) -> int:
         failures += check_serving()
     if args.require_streaming:
         failures += check_streaming(row)
+    if args.require_dsb:
+        failures += check_dsb(row)
     if args.require_training:
         failures += check_training(row, baseline)
     if args.require_resilience:

@@ -6,8 +6,15 @@ DSB skips derived from the *actual* weight groups — reproducing the paper's
 Table II / Fig. 6 measurement loop without silicon.
 
 Activation-side DSB (zero data columns) is measured from real activations
-but disabled by default: the paper observes only a 0.79 % win for unpruned
-models, i.e. the coefficient-group bypass is the operative mechanism.
+but disabled by default in the headline figure: the paper observes only a
+0.79 % win for unpruned models, i.e. the coefficient-group bypass is the
+operative mechanism. Whenever sample images are given the simulator still
+prices the *dual-sided* (weight + activation) cycle count next to the
+weight-only one (``cycles_dual`` / ``dual_dsb_cycle_ratio``), and with
+``measure_dsb=True`` additionally runs a real
+``ExecSpec(activation_dsb=True)`` bind through the implicit kernel's
+skip counter so the predicted skip (``1 - data_col_nonzero_frac``) sits
+next to the fraction of MXU passes the kernel actually elided.
 """
 from __future__ import annotations
 
@@ -73,6 +80,17 @@ class SimulationReport:
     hbm_bytes_implicit_int8: int = 0
     hbm_bytes_streamed_int8: int = 0
     bm_effective_per_layer: dict = dataclasses.field(default_factory=dict)
+    # Dual-sided DSB: the cycle model re-priced with the *measured*
+    # per-layer data-column fractions (None without sample images), plus
+    # prediction-vs-measurement of the kernel's activation skip. The
+    # prediction is 1 - data_col_nonzero_frac (CU_h-column granularity);
+    # the measurement is the implicit kernel's own skip counter under an
+    # activation_dsb bind — coarser (rows x cols x cpk window) by
+    # construction, so measured <= predicted is the expected shape.
+    cycles_dual: Optional[NetworkCycles] = None
+    dsb_skip_frac_predicted: Optional[float] = None
+    dsb_skip_frac_measured: Optional[float] = None
+    dsb_skip_per_layer: dict = dataclasses.field(default_factory=dict)
 
     @property
     def hbm_bytes_ratio(self) -> float:
@@ -104,6 +122,15 @@ class SimulationReport:
     def dsb_cycle_ratio(self) -> float:
         return self.cycles.total_dsb / max(self.cycles.total_min, 1)
 
+    @property
+    def dual_dsb_cycle_ratio(self) -> Optional[float]:
+        """Dual-sided (weight + measured activation) DSB cycles over the
+        dense floor — sits next to the weight-only ``dsb_cycle_ratio``.
+        None when no sample images were given."""
+        if self.cycles_dual is None:
+            return None
+        return self.cycles_dual.total_dsb / max(self.cycles.total_min, 1)
+
     def row(self) -> dict:
         return {
             "dsb": self.accel.dsb,
@@ -133,6 +160,9 @@ class SimulationReport:
             "hbm_bytes_int8_ratio": self.hbm_bytes_int8_ratio,
             "hbm_bytes_streamed_int8": self.hbm_bytes_streamed_int8,
             "hbm_bytes_streamed_ratio": self.hbm_bytes_streamed_ratio,
+            "dual_dsb_cycle_ratio": self.dual_dsb_cycle_ratio,
+            "dsb_skip_frac_predicted": self.dsb_skip_frac_predicted,
+            "dsb_skip_frac_measured": self.dsb_skip_frac_measured,
         }
 
 
@@ -154,9 +184,19 @@ def simulate(
     images: Optional[jnp.ndarray] = None,
     labels: Optional[jnp.ndarray] = None,
     data_bypass: bool = False,
+    measure_dsb: bool = False,
+    dsb_sample: int = 4,
 ) -> SimulationReport:
     """Price one image's inference (per-image cycles are input-independent
-    unless ``data_bypass``) and optionally measure accuracy on (images, labels)."""
+    unless ``data_bypass``) and optionally measure accuracy on (images, labels).
+
+    With images given, the report additionally carries ``cycles_dual`` —
+    the cycle model re-run with the measured per-layer data-column
+    fractions, i.e. the dual-sided DSB price next to the weight-only one.
+    ``measure_dsb=True`` (needs images) further runs a real folded +
+    quantized + streamed ``activation_dsb`` bind over ``images[:dsb_sample]``
+    and reports the kernel skip counter's ``dsb_skip_frac_measured`` next
+    to the column-granularity prediction ``dsb_skip_frac_predicted``."""
     qcfg = dataclasses.replace(cfg, quantized=True)
     dims = cnn.layer_dims(cfg, params)
 
@@ -213,6 +253,34 @@ def simulate(
 
     cyc = network_cycles([d for _, d in dims], accel, group_masks, data_fracs)
 
+    # --- dual-sided pricing + kernel-measured skip -------------------------
+    cyc_dual = None
+    dsb_pred = dsb_meas = None
+    dsb_per_layer = {}
+    if col_fracs:
+        dual_fracs = [col_fracs["/".join(path)] for path, _ in dims]
+        cyc_dual = network_cycles([d for _, d in dims], accel, group_masks,
+                                  dual_fracs)
+        dsb_pred = 1.0 - float(np.mean(dual_fracs))
+        dsb_per_layer = {n: {"predicted_skip": 1.0 - f}
+                         for n, f in col_fracs.items()}
+    if measure_dsb:
+        if images is None:
+            raise ValueError("measure_dsb=True needs sample images")
+        folded = cnn.fold_batchnorm(params, state, cfg)
+        dsb_exec = cnn.bind_execution(
+            folded, cfg,
+            spec=cnn.ExecSpec(folded=True, quantized=True, streamed=True,
+                              implicit=True, activation_dsb=True,
+                              n_cu=accel.n_cu))
+        m = dsb_exec.measure_dsb_skip(folded, images[:dsb_sample], cfg)
+        dsb_meas = m["dsb_skip_frac"]
+        for name, st_l in m["dsb_per_layer"].items():
+            d = dsb_per_layer.setdefault(name, {})
+            d["measured_skip"] = (st_l["skipped_steps"] /
+                                  max(st_l["live_steps"], 1))
+            d["live_steps"] = st_l["live_steps"]
+
     acc = None
     if images is not None and labels is not None:
         logits, _ = cnn.apply(params, state, images, qcfg, train=False)
@@ -244,6 +312,10 @@ def simulate(
         hbm_bytes_implicit_int8=pk_rep["hbm_bytes_implicit_int8"],
         hbm_bytes_streamed_int8=pk_rep["hbm_bytes_streamed_int8"],
         bm_effective_per_layer=bm_eff_per_layer,
+        cycles_dual=cyc_dual,
+        dsb_skip_frac_predicted=dsb_pred,
+        dsb_skip_frac_measured=dsb_meas,
+        dsb_skip_per_layer=dsb_per_layer,
     )
 
 

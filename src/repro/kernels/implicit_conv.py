@@ -11,32 +11,50 @@ contract on the Pallas grid:
 
 - Grid is ``(B·bpi, nNb, max_nnz)`` — M-blocks × output tile columns ×
   live K-tiles, exactly like :mod:`block_sparse_matmul`.
-- The x operand is the **padded NHWC activation itself**. Its BlockSpec
-  delivers a ``(1, Hp, Wp, cpk)`` slab — one image, the ``cpk`` input
-  channels covered by the live K-tile named by the scalar-prefetched
-  index table — and the kernel builds the ``(bm, bk)`` patch tile in
-  VMEM from kx·ky static strided slices of that slab (offsets ``(dy,
-  dx)`` are compile-time; the channel slice is the dynamic, prefetched
-  part). Pruned groups cost neither DMA nor MXU cycles: dead tiles are
-  never in the table, so their slabs are never fetched.
+- The x operand is the **padded NHWC activation itself**, left in HBM
+  (``memory_space=ANY``). Per live K-tile the kernel DMAs only the
+  *window* its M-block reads — ``(rows, cols, cpk)`` where ``rows/cols``
+  cover ``block_oh × block_ow`` output pixels at the conv's stride —
+  into a **double-buffered** VMEM slab with
+  :func:`pltpu.make_async_copy`: the copy for live tile ``t+1`` (keyed
+  on the scalar-prefetched next table entry) is started before tile
+  ``t``'s gather+dot runs, so slab traffic hides behind compute. Pruned
+  groups cost neither DMA nor MXU cycles: dead tiles are never in the
+  table, so their slabs are never fetched.
 - M-blocking is **adaptive**: an M-block is ``block_oh`` whole output
-  rows, ``bm = ceil8(block_oh·Wo) ≤ cap`` — a batch-1 4×4 tail runs at
-  ``bm=16`` instead of padding to 128. :func:`choose_m_block` picks the
-  largest such ``block_oh``; blocks never straddle images.
+  rows (``bm = ceil8(block_oh·Wo) ≤ cap`` — a batch-1 4×4 tail runs at
+  ``bm=16`` instead of padding to 128), and when even one output row
+  exceeds the cap the row is split into ``spi`` **column segments** of
+  ``block_ow`` pixels, so wide-resolution inputs keep the implicit path
+  instead of falling back to the materializing oracle.
+  :func:`choose_m_block` returns the :class:`MBlock` geometry; blocks
+  never straddle images.
 - The fused bias+ReLU flush epilogue carries over unchanged.
 
-Per live grid step the kernel moves ``Hp·Wp·cpk`` activation elements
-instead of ``bm·bk`` patch-matrix elements — and the patch matrix is
-never written at all. VMEM working set adds one activation slab
-(``Hp·Wp·cpk``); :data:`SLAB_VMEM_BUDGET` bounds it, callers fall back
-to the materializing oracle above it (and for very wide images where no
-whole-row M-block fits the cap).
+Per live grid step the kernel moves ``rows·cols·cpk`` activation
+elements — the window its M-block actually reads — instead of ``bm·bk``
+patch-matrix elements, and the patch matrix is never written at all.
+VMEM working set adds the two slab buffers;
+:data:`SLAB_VMEM_BUDGET` bounds them, callers fall back to the
+materializing oracle above it.
 
 Operands may be **int8 Q-format codes** (the paper's Q3.4 activations ×
 Q2.5 coefficients): the in-VMEM gather is dtype-agnostic, accumulation
 switches to exact int32, and the flush epilogue dequantizes through a
 per-cout ``scale`` row before bias/ReLU — one byte per operand element
 moved instead of four, on exactly the same grid and index table.
+
+**Activation-side DSB** (``activation_dsb=True``, int8 codes only):
+post-ReLU zeros are *exact* integer codes on the streamed wire, so the
+kernel reduces each DMA'd window to an any-nonzero flag and branches
+around the gather **and** the MXU dot (:func:`pl.when`) when the block
+is all-zero. The accumulator is untouched on a skip, so results stay
+bit-exact vs the non-skip kernel at every density — dual-sided
+weight × activation sparsity (Zhu et al., arXiv 2001.01955) with no
+tolerance question. ``count_skips=True`` adds a second output — a
+``(B·bpi, nNb)`` int32 skip counter written from SMEM — so callers can
+report the measured skip fraction (``skipped / (B·bpi·Σcnt)``) next to
+the simulator's ``data_col_nonzero_frac`` prediction.
 
 Differentiation: :func:`implicit_block_sparse_conv` itself has no JVP
 (Pallas calls are opaque to AD) — the ``custom_vjp`` lives one level up,
@@ -51,7 +69,7 @@ structure to exploit).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,9 +81,10 @@ from .block_sparse_matmul import (append_epilogue_inputs, flush_epilogue,
                                   quantized_contract, unpack_epilogue_refs)
 from .conv_lowering import same_pads
 
-# Largest activation slab (bytes) the implicit kernel will hold in VMEM.
-# One slab is (Hp, Wp, cpk) of the input dtype; above this the caller
-# uses the materializing path (still correct, just HBM-hungrier).
+# Largest activation working set (bytes) the implicit kernel will hold in
+# VMEM: both double-buffer slots of the (rows, cols, cpk) window slab.
+# Above this the caller uses the materializing path (still correct, just
+# HBM-hungrier).
 SLAB_VMEM_BUDGET = 2 * 1024 * 1024
 
 
@@ -73,73 +92,164 @@ def _ceil_to(n: int, m: int) -> int:
     return -(-n // m) * m
 
 
-def choose_m_block(ho: int, wo: int, cap: int = 128) -> Optional[Tuple[int, int, int]]:
-    """Adaptive M-blocking: whole output rows per grid block.
+class MBlock(NamedTuple):
+    """Adaptive M-block geometry: ``block_oh × block_ow`` output pixels
+    per grid block, ``spi`` column segments per row band, ``bpi =
+    ceil(ho/block_oh)·spi`` M-blocks per image."""
+    block_oh: int
+    block_ow: int
+    spi: int
+    bm: int
+    bpi: int
 
-    Returns ``(block_oh, bm, bpi)`` — ``block_oh`` output rows per
-    M-block, padded to ``bm = ceil8(block_oh·wo) ≤ cap`` kernel rows,
-    ``bpi`` M-blocks per image (blocks never straddle images). Picks the
-    largest ``block_oh`` that fits, so small layers stop padding up to a
+
+def choose_m_block(ho: int, wo: int, cap: int = 128) -> Optional[MBlock]:
+    """Adaptive M-blocking: whole output rows per grid block, column
+    segments when a row is too wide.
+
+    Picks the largest ``block_oh`` whole output rows with ``bm =
+    ceil8(block_oh·wo) ≤ cap``, so small layers stop padding up to a
     fixed 128: a 4×4 output runs at ``bm=16``, an 8×8 at ``bm=64``.
-    ``None`` when even one output row exceeds ``cap`` (very wide images
-    → materializing fallback).
+    When even one output row exceeds ``cap`` the row splits into
+    ``spi = ceil(wo/block_ow)`` column segments of ``block_ow =
+    8·⌊cap/8⌋`` pixels — wide-resolution inputs keep the implicit path.
+    ``None`` only when the cap can't fit one 8-pixel segment. Blocks
+    never straddle images.
     """
-    if ho < 1 or wo < 1 or _ceil_to(wo, 8) > cap:
+    if ho < 1 or wo < 1:
         return None
-    block_oh = max(b for b in range(1, ho + 1) if _ceil_to(b * wo, 8) <= cap)
-    return block_oh, _ceil_to(block_oh * wo, 8), -(-ho // block_oh)
+    if _ceil_to(wo, 8) <= cap:
+        block_oh = max(b for b in range(1, ho + 1)
+                       if _ceil_to(b * wo, 8) <= cap)
+        return MBlock(block_oh, wo, 1, _ceil_to(block_oh * wo, 8),
+                      -(-ho // block_oh))
+    block_ow = (cap // 8) * 8
+    if block_ow < 8:
+        return None
+    spi = -(-wo // block_ow)
+    return MBlock(1, block_ow, spi, block_ow, ho * spi)
+
+
+def window_shape(mb: MBlock, kx: int, ky: int, stride: int) -> Tuple[int, int]:
+    """(rows, cols) of padded input one M-block's window slab covers —
+    the per-live-step DMA granule."""
+    return ((mb.block_oh - 1) * stride + kx,
+            (mb.block_ow - 1) * stride + ky)
 
 
 def pad_input(x: jnp.ndarray, kx: int, ky: int, stride: int, padding: str,
-              block_oh: int, bpi: int, c_packed: int) -> jnp.ndarray:
+              mb: MBlock, c_packed: int) -> jnp.ndarray:
     """Zero-pad an NHWC input for the implicit kernel: the conv's own
-    SAME/VALID pads, extra trailing rows so the *last* M-block's window
-    slab stays in bounds (its tail output rows are cropped after the
-    kernel), and channel padding to the packed K grid. Pure ``jnp.pad``
-    — no kx·ky patch blowup, no transpose."""
+    SAME/VALID pads, extra trailing rows/columns so the *last* M-block's
+    window slab stays in bounds (its tail output pixels are cropped
+    after the kernel), and channel padding to the packed K grid. Pure
+    ``jnp.pad`` — no kx·ky patch blowup, no transpose."""
     B, H, W, C = x.shape
     if padding == "SAME":
         (pt, pb), (pw0, pw1) = same_pads(H, kx, stride), same_pads(W, ky, stride)
     else:
         pt = pb = pw0 = pw1 = 0
-    rows_need = (bpi - 1) * block_oh * stride + (block_oh - 1) * stride + kx
-    extra = max(rows_need - (H + pt + pb), 0)
-    return jnp.pad(x, ((0, 0), (pt, pb + extra), (pw0, pw1),
+    rb = mb.bpi // mb.spi
+    rows_need = (rb - 1) * mb.block_oh * stride \
+        + (mb.block_oh - 1) * stride + kx
+    cols_need = (mb.spi - 1) * mb.block_ow * stride \
+        + (mb.block_ow - 1) * stride + ky
+    extra_r = max(rows_need - (H + pt + pb), 0)
+    extra_c = max(cols_need - (W + pw0 + pw1), 0)
+    return jnp.pad(x, ((0, 0), (pt, pb + extra_r), (pw0, pw1 + extra_c),
                        (0, c_packed - C)))
 
 
+def crop_output(out2d: jnp.ndarray, mb: MBlock, batch: int, ho: int,
+                wo: int) -> jnp.ndarray:
+    """Undo the M-block tiling: ``(B·bpi·bm, n_packed)`` kernel output →
+    ``(B, ho, wo, n_packed)`` with the bm row padding and block
+    overhang dropped."""
+    rb = mb.bpi // mb.spi
+    o = out2d.reshape(batch, rb, mb.spi, mb.bm, -1)
+    o = o[:, :, :, :mb.block_oh * mb.block_ow]
+    o = o.reshape(batch, rb, mb.spi, mb.block_oh, mb.block_ow, -1)
+    o = o.transpose(0, 1, 3, 2, 4, 5)
+    o = o.reshape(batch, rb * mb.block_oh, mb.spi * mb.block_ow, -1)
+    return o[:, :ho, :wo]
+
+
 def _kernel(idx_ref, cnt_ref, x_ref, w_ref, *refs,
-            kx, ky, stride, block_oh, bpi, wo, cpk, slot, bm, bk,
-            acc_dtype, has_scale, has_bias, has_out, relu):
-    scale_ref, b_ref, out_ref, o_ref, acc_ref = unpack_epilogue_refs(
-        refs, has_scale, has_bias, has_out)
+            kx, ky, stride, block_oh, block_ow, spi, bpi, cpk, slot, bm, bk,
+            acc_dtype, has_scale, has_bias, has_out, relu, activation_dsb,
+            count_skips):
+    n_ep = int(has_scale) + int(has_bias) + int(has_out)
+    skip_ref = refs[n_ep + 1] if count_skips else None
+    acc_ref, slab_ref, sem_ref = refs[-3], refs[-2], refs[-1]
+    scale_ref, b_ref, out_ref, o_ref, _ = unpack_epilogue_refs(
+        (*refs[:n_ep + 1], acc_ref), has_scale, has_bias, has_out)
     i, j, s = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    live = cnt_ref[j]
+    rows = (block_oh - 1) * stride + kx
+    cols = (block_ow - 1) * stride + ky
+    b = i // bpi
+    p = i % bpi
+    r0 = (p // spi) * (block_oh * stride)
+    q0 = (p % spi) * (block_ow * stride)
+    buf = jax.lax.rem(s, 2)
+
+    def slab_copy(e, sl):
+        # window of live K-tile (= cin-block) idx[j, e] into slab slot sl
+        c0 = idx_ref[j, e] * cpk
+        return pltpu.make_async_copy(
+            x_ref.at[b, pl.ds(r0, rows), pl.ds(q0, cols), pl.ds(c0, cpk)],
+            slab_ref.at[sl], sem_ref.at[sl])
 
     @pl.when(s == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        if count_skips:
+            skip_ref[0, 0] = 0
 
-    @pl.when(s < cnt_ref[j])
-    def _gather_mac():
-        xs = x_ref[0]                       # (Hp, Wp, cpk) activation slab
-        rows = (block_oh - 1) * stride + kx
-        r0 = (i % bpi) * (block_oh * stride)
-        win = jax.lax.dynamic_slice(xs, (r0, 0, 0),
-                                    (rows, xs.shape[1], cpk))
-        # the im2col gather, in VMEM: tap (dy, dx) of output pixel
-        # (oh, ow) is win[oh*stride + dy, ow*stride + dx] — kx*ky static
-        # strided slices instead of an HBM patch matrix
-        taps = [win[dy:dy + (block_oh - 1) * stride + 1:stride,
-                    dx:dx + (wo - 1) * stride + 1:stride, :]
-                for dy in range(kx) for dx in range(ky)]
-        p = jnp.stack(taps, axis=-1)        # (block_oh, wo, cpk, kx*ky)
-        if slot > kx * ky:                  # sublane-aligned row slots
-            p = jnp.pad(p, ((0, 0), (0, 0), (0, 0), (0, slot - kx * ky)))
-        p = p.reshape(block_oh * wo, cpk * slot)
-        if bm > block_oh * wo or bk > cpk * slot:
-            p = jnp.pad(p, ((0, bm - block_oh * wo), (0, bk - cpk * slot)))
-        acc_ref[...] += jnp.dot(p, w_ref[...],
-                                preferred_element_type=acc_dtype)
+        @pl.when(live > 0)
+        def _warmup():
+            slab_copy(0, 0).start()
+
+    @pl.when(s < live)
+    def _step():
+        slab_copy(s, buf).wait()
+
+        @pl.when(s + 1 < live)
+        def _prefetch():                    # overlap tile s+1's DMA with
+            slab_copy(s + 1, 1 - buf).start()   # tile s's gather+dot
+
+        win = slab_ref[buf]                 # (rows, cols, cpk) window slab
+
+        def _gather_mac():
+            # the im2col gather, in VMEM: tap (dy, dx) of output pixel
+            # (oh, ow) is win[oh*stride + dy, ow*stride + dx] — kx*ky
+            # static strided slices instead of an HBM patch matrix
+            taps = [win[dy:dy + (block_oh - 1) * stride + 1:stride,
+                        dx:dx + (block_ow - 1) * stride + 1:stride, :]
+                    for dy in range(kx) for dx in range(ky)]
+            pt = jnp.stack(taps, axis=-1)   # (block_oh, block_ow, cpk, kx*ky)
+            if slot > kx * ky:              # sublane-aligned row slots
+                pt = jnp.pad(pt, ((0, 0), (0, 0), (0, 0),
+                                  (0, slot - kx * ky)))
+            pt = pt.reshape(block_oh * block_ow, cpk * slot)
+            if bm > block_oh * block_ow or bk > cpk * slot:
+                pt = jnp.pad(pt, ((0, bm - block_oh * block_ow),
+                                  (0, bk - cpk * slot)))
+            acc_ref[...] += jnp.dot(pt, w_ref[...],
+                                    preferred_element_type=acc_dtype)
+
+        if activation_dsb:
+            # post-ReLU zeros are exact int8 codes: an all-zero window
+            # contributes exactly nothing, so skip the gather AND the
+            # MXU dot — the untouched accumulator keeps bit-exactness
+            hit = jnp.any(win != 0)
+            pl.when(hit)(_gather_mac)
+            if count_skips:
+                @pl.when(jnp.logical_not(hit))
+                def _count():
+                    skip_ref[0, 0] += 1
+        else:
+            _gather_mac()
 
     @pl.when(s == pl.num_programs(2) - 1)
     def _flush():
@@ -148,8 +258,8 @@ def _kernel(idx_ref, cnt_ref, x_ref, w_ref, *refs,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "kx", "ky", "stride", "block_oh", "bpi", "wo", "block", "bm", "cpk",
-    "slot", "relu", "interpret"))
+    "kx", "ky", "stride", "mb", "block", "cpk", "slot", "relu",
+    "activation_dsb", "count_skips", "interpret"))
 def implicit_block_sparse_conv(
     xp: jnp.ndarray,           # (B, Hp, Wp, nKb*cpk) pad_input() output
     w: jnp.ndarray,            # (nKb*bk, nNb*bn) packed weight (f32/bf16/int8)
@@ -160,27 +270,46 @@ def implicit_block_sparse_conv(
     out_scale: Optional[jnp.ndarray] = None,  # (nNb*bn,) requantize row -> int8
     *,
     kx: int, ky: int, stride: int,
-    block_oh: int, bpi: int, wo: int,
-    block: Tuple[int, int], bm: int, cpk: int, slot: int,
+    mb: MBlock,
+    block: Tuple[int, int], cpk: int, slot: int,
     relu: bool = False,
+    activation_dsb: bool = False,
+    count_skips: bool = False,
     interpret: bool = False,
-) -> jnp.ndarray:
-    """-> (B*bpi*bm, nNb*bn). Rows of M-block ``(b, p)`` start at
-    ``(b*bpi + p)*bm``; the first ``block_oh*wo`` are output pixels
-    ``(p*block_oh .. )*wo`` of image ``b`` row-major, the rest padding
-    (crop with the output-row mapping, see ``conv_plan.make_sparse_conv``).
+):
+    """-> (B*bpi*bm, nNb*bn). M-block ``(b, p)`` starts at row
+    ``(b*bpi + p)*bm``; its first ``block_oh*block_ow`` rows are the
+    block's output pixels row-major (row band ``p // spi``, column
+    segment ``p % spi``), the rest padding — undo with
+    :func:`crop_output`.
 
     int8 operands (``xp``/``w`` are Q-format codes): the gather works on
     codes, accumulation is exact **int32**, and the flush epilogue
     dequantizes through the per-cout ``scale`` row (then bias, then ReLU)
     — output is f32, or int8 Q-format codes when the requantizing
     ``out_scale`` row is passed (streamed layer-to-layer activations).
-    Same contract as :mod:`block_sparse_matmul`."""
+    Same contract as :mod:`block_sparse_matmul`.
+
+    ``activation_dsb`` (int8 codes only) skips all-zero window slabs —
+    bit-exact, see the module docstring. With ``count_skips`` the return
+    is ``(out, skips)`` where ``skips`` is the ``(B*bpi, nNb)`` int32
+    per-M-block/per-column skip counter (skipped live steps; total live
+    steps are ``B*bpi*cnt.sum()``)."""
     B, Hp, Wp, Cp = xp.shape
     bk, bn = block
     assert Cp % cpk == 0 and w.shape[0] % bk == 0 and w.shape[1] % bn == 0, (
         f"packed shapes off-grid: x {xp.shape} (cpk={cpk}), w {w.shape}, "
         f"block={block}")
+    if activation_dsb:
+        assert xp.dtype == jnp.int8, (
+            "activation_dsb keys the skip on exact int8 zero codes — "
+            "quantize the activation (quant=...) to use it")
+    rows, cols = window_shape(mb, kx, ky, stride)
+    rb = mb.bpi // mb.spi
+    assert ((rb - 1) * mb.block_oh * stride + rows <= Hp
+            and (mb.spi - 1) * mb.block_ow * stride + cols <= Wp), (
+        f"window slab out of bounds: pad_input() with this MBlock first "
+        f"(xp {xp.shape}, mb {mb}, k ({kx},{ky}), stride {stride})")
     acc_dtype, out_dtype = quantized_contract(xp, w, scale, out_scale)
     nNb = w.shape[1] // bn
     max_nnz = idx.shape[1]
@@ -189,28 +318,43 @@ def implicit_block_sparse_conv(
     has_out = out_scale is not None
 
     in_specs = [
-        pl.BlockSpec((1, Hp, Wp, cpk),
-                     lambda i, j, s, idx, cnt: (i // bpi, 0, 0, idx[j, s])),
+        pl.BlockSpec(memory_space=pltpu.ANY),   # padded NHWC stays in HBM;
+        # the kernel DMAs per-M-block windows of the prefetched K-tile
         pl.BlockSpec((bk, bn), lambda i, j, s, idx, cnt: (idx[j, s], j)),
     ]
     inputs = [idx, cnt, xp, w]
     append_epilogue_inputs(in_specs, inputs, scale, bias, bn, out_scale)
 
+    out_specs = pl.BlockSpec((mb.bm, bn), lambda i, j, s, idx, cnt: (i, j))
+    out_shape = jax.ShapeDtypeStruct((B * mb.bpi * mb.bm, w.shape[1]),
+                                     out_dtype)
+    if count_skips:
+        out_specs = [out_specs, pl.BlockSpec(
+            memory_space=pltpu.SMEM, block_shape=(1, 1),
+            index_map=lambda i, j, s, idx, cnt: (i, j))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((B * mb.bpi, nNb), jnp.int32)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B * bpi, nNb, max_nnz),
+        grid=(B * mb.bpi, nNb, max_nnz),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s, idx, cnt: (i, j)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+        out_specs=out_specs,
+        scratch_shapes=[pltpu.VMEM((mb.bm, bn), acc_dtype),
+                        pltpu.VMEM((2, rows, cols, cpk), xp.dtype),
+                        pltpu.SemaphoreType.DMA((2,))],
     )
     return pl.pallas_call(
         functools.partial(_kernel, kx=kx, ky=ky, stride=stride,
-                          block_oh=block_oh, bpi=bpi, wo=wo, cpk=cpk,
-                          slot=slot, bm=bm, bk=bk, acc_dtype=acc_dtype,
+                          block_oh=mb.block_oh, block_ow=mb.block_ow,
+                          spi=mb.spi, bpi=mb.bpi, cpk=cpk,
+                          slot=slot, bm=mb.bm, bk=bk, acc_dtype=acc_dtype,
                           has_scale=has_scale, has_bias=has_bias,
-                          has_out=has_out, relu=relu),
+                          has_out=has_out, relu=relu,
+                          activation_dsb=activation_dsb,
+                          count_skips=count_skips),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B * bpi * bm, w.shape[1]), out_dtype),
+        out_shape=out_shape,
         interpret=interpret,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),

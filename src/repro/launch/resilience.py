@@ -70,14 +70,20 @@ def degradation_ladder(spec: ExecSpec) -> Tuple[Any, ...]:
     Each step clears exactly one capability, so every intermediate rung is
     a valid :class:`ExecSpec` (the ``folded``/``packed`` structure of the
     bind is preserved — only the wire/operand contract degrades). A spec
-    that already sits low on the ladder just gets the rungs below it."""
+    that already sits low on the ladder just gets the rungs below it.
+
+    ``activation_dsb`` rides the int8 wire: it survives the
+    ``streamed → quantized`` step (the skip keys on exact int8 codes,
+    which plain-quantized binds still carry) and is cleared together
+    with ``quantized`` — an f32 rung has no exact zero codes to test,
+    and :class:`ExecSpec` validation rejects the combination."""
     rungs: List[Any] = [spec]
     s = spec
     if s.streamed:
         s = dataclasses.replace(s, streamed=False)
         rungs.append(s)
     if s.quantized:
-        s = dataclasses.replace(s, quantized=False)
+        s = dataclasses.replace(s, quantized=False, activation_dsb=False)
         rungs.append(s)
     rungs.append(None)                      # dense lax.conv fallback
     return tuple(rungs)
@@ -138,7 +144,12 @@ class ServePolicy:
     :class:`OverloadError`) or served one ladder rung down
     (``"degrade"`` — cheaper, but served). ``default_deadline_s``: the
     deadline applied when ``infer`` is called without one (``None`` = no
-    deadline)."""
+    deadline). ``promote_after_clean``: latency-aware ladder *promotion*
+    — after this many consecutive requests served entirely clean (no
+    degradation, no retry, no guardrail trip) while sitting on a
+    degraded rung, the server walks back **up** one rung and re-earns
+    the faster contract; ``None`` disables promotion (degradation stays
+    sticky, the pre-promotion behavior)."""
 
     max_bind_retries: int = 2
     bind_backoff_s: float = 0.005
@@ -149,6 +160,7 @@ class ServePolicy:
     max_request_images: Optional[int] = None
     overload_action: str = "shed"
     default_deadline_s: Optional[float] = None
+    promote_after_clean: Optional[int] = None
 
     def __post_init__(self):
         if self.overload_action not in ("shed", "degrade"):
@@ -158,6 +170,10 @@ class ServePolicy:
         if self.max_bind_retries < 0:
             raise ValueError(
                 f"max_bind_retries must be >= 0, got {self.max_bind_retries}")
+        if self.promote_after_clean is not None and self.promote_after_clean < 1:
+            raise ValueError(
+                f"promote_after_clean must be >= 1 (or None to disable), "
+                f"got {self.promote_after_clean}")
 
 
 @dataclasses.dataclass

@@ -67,7 +67,8 @@ _MASK_PREFIX = "masks|"          # checkpoint._flatten path join of {"masks": ..
 def _fresh_resilience_counters() -> Dict[str, int]:
     return {"bind_retries": 0, "bind_failures": 0, "downgrades": 0,
             "nonfinite_caught": 0, "mask_repairs": 0, "shed_overload": 0,
-            "overload_downgrades": 0, "deadline_timeouts": 0}
+            "overload_downgrades": 0, "deadline_timeouts": 0,
+            "promotions": 0}
 
 
 class CnnServer:
@@ -90,7 +91,13 @@ class CnnServer:
     ``snapshot_dir`` warm-starts the mask/fingerprint state from a prior
     :meth:`snapshot` instead of re-deriving HAPM masks. The server's
     current ladder position is ``stats()["rung"]``; it degrades stickily
-    on faults and resets on :meth:`update_masks`.
+    on faults and resets on :meth:`update_masks`. With
+    ``policy.promote_after_clean = N`` the stickiness is latency-aware
+    instead of permanent: after ``N`` consecutive requests served
+    entirely clean at a degraded rung, the server walks back *up* one
+    rung (counted in ``resilience["promotions"]``) — a transient fault
+    no longer costs the fast contract forever, and a persistent fault
+    just re-degrades and restarts the streak.
     """
 
     def __init__(self, params, state, cfg: cnn.ResNetConfig, *,
@@ -111,6 +118,7 @@ class CnnServer:
                         dataclasses.replace(cfg, quantized=self.spec.quantized))
         self._rungs = degradation_ladder(self.spec)
         self._level = 0
+        self._clean_streak = 0
         self._svc_ema: Dict[int, float] = {}
         self.resilience = _fresh_resilience_counters()
         self.degrade_log: List[str] = []
@@ -178,6 +186,7 @@ class CnnServer:
             raise ValueError(
                 f"level must be in [0, {len(self._rungs) - 1}], got {level}")
         self._level = level
+        self._clean_streak = 0
 
     def update_masks(self, params, state=None) -> int:
         """Install new weights (a HAPM epoch pruned more groups, or a
@@ -204,6 +213,7 @@ class CnnServer:
         unchanged = (len(old_leaves) == len(new_leaves) and
                      all(a is b for a, b in zip(old_leaves, new_leaves)))
         self._level = 0
+        self._clean_streak = 0
         self.cache.clear_quarantine()
         return self.cache.invalidate(
             self.arch_fp, keep_mask_fp=self.mask_fp if unchanged else None)
@@ -375,12 +385,43 @@ class CnnServer:
         step = (f"{rung_name(self._rungs[level])} -> "
                 f"{rung_name(self._rungs[new])}: {why}")
         self.resilience["downgrades"] += 1
+        self._clean_streak = 0           # promotion must re-earn the rung
         self.degrade_log.append(step)
         del self.degrade_log[:-50]
         logger.warning("degradation ladder: %s", step)
         if new > self._level:
             self._level = new            # sticky: later requests start here
         return new
+
+    def _note_clean_request(self, start_level: int, end_level: int,
+                            downgraded: bool) -> None:
+        """Latency-aware ladder promotion (``policy.promote_after_clean``):
+        a request that ran entirely at its sticky starting rung — no
+        mid-request degradation, no overload downgrade — extends the
+        clean streak; ``N`` in a row at a degraded rung walk the sticky
+        level back *up* one rung. Any degradation resets the streak (see
+        :meth:`_degrade`), so a persistent fault oscillates at most once
+        per ``N`` requests instead of pinning the fast contract forever."""
+        pol = self.policy
+        if pol.promote_after_clean is None:
+            return
+        if downgraded or end_level != start_level or self._level == 0:
+            if downgraded:
+                self._clean_streak = 0
+            return
+        self._clean_streak += 1
+        if self._clean_streak < pol.promote_after_clean:
+            return
+        old = self._level
+        self._level = old - 1
+        self._clean_streak = 0
+        self.resilience["promotions"] += 1
+        step = (f"{rung_name(self._rungs[old])} -> "
+                f"{rung_name(self._rungs[self._level])}: promoted after "
+                f"{pol.promote_after_clean} consecutive clean request(s)")
+        self.degrade_log.append(step)
+        del self.degrade_log[:-50]
+        logger.info("degradation ladder: %s", step)
 
     def _run_chunk(self, x, bucket: int, level: int):
         """One padded chunk through the ladder: bind (with retries) at
@@ -448,6 +489,8 @@ class CnnServer:
             # with an empty logits array instead of IndexError on out[0]
             return jnp.zeros((0, self.cfg.num_classes), jnp.float32)
         level = self._level
+        start_level = level
+        overload_downgraded = False
         if pol.max_request_images is not None and n > pol.max_request_images:
             if pol.overload_action == "shed":
                 self.resilience["shed_overload"] += 1
@@ -457,6 +500,7 @@ class CnnServer:
                     "(overload_action='shed')")
             if level + 1 < len(self._rungs):
                 level += 1               # degrade this request only
+                overload_downgraded = True
                 self.resilience["overload_downgrades"] += 1
                 logger.warning(
                     "oversized request (%d > %d images) served one rung "
@@ -489,6 +533,7 @@ class CnnServer:
             self._svc_ema[bucket] = dt if ema is None else 0.7 * ema + 0.3 * dt
             out.append(y[:chunk.shape[0]])
         self.last_request_level = level
+        self._note_clean_request(start_level, level, overload_downgraded)
         return out[0] if len(out) == 1 else jnp.concatenate(out)
 
     def report(self, batch: int = 1, **kw) -> Dict[str, Any]:
@@ -501,6 +546,7 @@ class CnnServer:
                     arch_fp=self.arch_fp[:12], buckets=list(self.buckets),
                     level=self._level,
                     rung=rung_name(self._rungs[self._level]),
+                    clean_streak=self._clean_streak,
                     resilience=dict(self.resilience))
 
 
@@ -647,6 +693,9 @@ def main(argv=None):
     ap.add_argument("--streamed", action="store_true",
                     help="end-to-end int8 activation streaming (implies "
                          "--quantized --folded)")
+    ap.add_argument("--activation-dsb", action="store_true",
+                    help="skip all-zero activation windows on the int8 "
+                         "wire (dual-sided sparsity; implies --streamed)")
     ap.add_argument("--buckets", type=int, nargs="+", default=None)
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
     ap.add_argument("--deadline-ms", type=float, default=None,
@@ -673,9 +722,11 @@ def main(argv=None):
     st = hapm_epoch_update(hapm_init(specs, hcfg), specs, params, hcfg)
     pruned = apply_masks(params, hapm_element_masks(specs, st))
 
-    spec = cnn.ExecSpec(quantized=args.quantized or args.streamed,
-                        folded=args.folded or args.streamed,
-                        streamed=args.streamed, n_cu=n_cu)
+    streamed = args.streamed or args.activation_dsb
+    spec = cnn.ExecSpec(quantized=args.quantized or streamed,
+                        folded=args.folded or streamed,
+                        streamed=streamed,
+                        activation_dsb=args.activation_dsb, n_cu=n_cu)
     server = CnnServer(pruned, state, cfg, spec=spec, buckets=buckets)
     t0 = time.time()
     server.warmup()
@@ -695,6 +746,11 @@ def main(argv=None):
           f"p50 {np.percentile(lat, 50) * 1e3:.1f} ms, "
           f"p99 {np.percentile(lat, 99) * 1e3:.1f} ms")
     print(f"[cache] {server.stats()}")
+    if args.activation_dsb:
+        m = server._bind().measure_dsb_skip(
+            server._tree, jnp.asarray(x), server.run_cfg)
+        print(f"[dsb] skip_frac {m['dsb_skip_frac']:.3f} "
+              f"({m['dsb_skipped_steps']}/{m['dsb_live_steps']} steps)")
 
     # queueing behavior under a bursty arrival trace (virtual clock)
     batcher = BucketBatcher(buckets, max_wait_s=args.max_wait_ms / 1e3)

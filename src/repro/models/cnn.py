@@ -310,6 +310,15 @@ class ExecSpec:
     whole residual dataflow on codes (int32 residual adds) and
     dequantizes once at the head.
 
+    ``activation_dsb``: dual-sided sparsity — every bound implicit-kernel
+    conv skips the gather+MXU pass for activation window blocks that are
+    all-zero **int8 codes** (post-ReLU zeros are exact codes, so the
+    skip is bit-exact at every density; Zhu et al., arXiv 2001.01955).
+    Requires ``quantized`` (the zero test is exact only on codes) and the
+    implicit kernel (``implicit`` must not be ``False``). Measure the
+    realized skip with :meth:`SparseConvExec.measure_dsb_skip` /
+    ``report(dsb_sample=...)``.
+
     Invalid field combinations raise a single :class:`ValueError` listing
     every violated pair by name — the contract table below is the one
     authority, callers never see layer-dependent messages.
@@ -324,6 +333,7 @@ class ExecSpec:
     dense_fallback: float = 0.999
     trainable: bool = False
     streamed: bool = False
+    activation_dsb: bool = False
 
     def __post_init__(self):
         # contract table: collect EVERY violation, raise once, naming the
@@ -356,6 +366,16 @@ class ExecSpec:
                 "streamed without folded: conv → +b → ReLU must complete "
                 "in-kernel for the flush to emit the final activation "
                 "codes — stream a fold_batchnorm tree")
+        if self.activation_dsb and not self.quantized:
+            violations.append(
+                "activation_dsb without quantized: the zero-block skip is "
+                "keyed on exact int8 codes — f32 zeros are a tolerance "
+                "question the kernel refuses to answer")
+        if self.activation_dsb and self.implicit is False:
+            violations.append(
+                "activation_dsb with implicit=False: the skip lives in "
+                "the implicit kernel's window gather — the materializing "
+                "path has no window to test")
         if violations:
             raise ValueError(
                 "invalid ExecSpec: " + "; ".join(violations))
@@ -381,6 +401,8 @@ class SparseConvExec:
     folded: bool = False             # bias/ReLU epilogue fused (apply_folded only)
     streamed: bool = False           # in-epilogue requantize: layers exchange
                                      # int8 Q3.4 codes (apply_folded wire mode)
+    activation_dsb: bool = False     # dual-sided: implicit kernel skips
+                                     # all-zero int8 activation windows
     trainable: bool = False          # convs take per-call weights, custom_vjp
     bound_weights: Any = None        # {path: source weight} — staleness check
     implicit: bool = False           # convs bound to the implicit-im2col kernel
@@ -485,8 +507,62 @@ class SparseConvExec:
             den += mb * bm_eff * area
         return num / den if den else 0.0
 
+    def measure_dsb_skip(self, tree: PyTree, x: jnp.ndarray,
+                         cfg: ResNetConfig, state: PyTree = None) -> dict:
+        """One forward with the kernel-side skip counter on, through the
+        real network dataflow (``apply_folded`` for folded execs,
+        ``apply`` otherwise — ``state`` required there), summing each
+        bound layer's ``conv.skip_counts`` stats.  Returns
+        ``{"dsb_skip_frac", "dsb_skipped_steps", "dsb_live_steps",
+        "dsb_per_layer"}`` — the *measured* dual-sided skip fraction
+        (skipped / dispatched live grid steps; 0.0 for a bind without
+        ``activation_dsb``), the number the simulator prices next to its
+        ``data_col_nonzero_frac`` prediction.  ``tree`` is the tree the
+        exec was bound from (the folded tree for folded execs); the
+        forward's outputs are bit-identical to the unmeasured one (the
+        counter is a second kernel output, not a different kernel)."""
+        if self.trainable:
+            raise ValueError("measure_dsb_skip needs a prebound exec — "
+                             "trainable binds have no packed weight to "
+                             "run the counter against")
+        totals = {"skipped": 0, "live": 0}
+        per_layer: dict = {}
+
+        def wrap(keys, fn):
+            def wrapped(h, stride=1, padding="SAME"):
+                y, st = fn.skip_counts(h, stride=stride, padding=padding)
+                if st is not None:
+                    totals["skipped"] += st["skipped_steps"]
+                    totals["live"] += st["live_steps"]
+                    agg = per_layer.setdefault(
+                        "/".join(keys), {"skipped_steps": 0, "live_steps": 0})
+                    agg["skipped_steps"] += st["skipped_steps"]
+                    agg["live_steps"] += st["live_steps"]
+                return y
+            return wrapped
+
+        shadow = dataclasses.replace(self, table={
+            k: (wrap(k, fn) if fn is not None else None)
+            for k, fn in self.table.items()})
+        if self.folded:
+            apply_folded(tree, x, cfg, sparse=shadow)
+        else:
+            if state is None:
+                raise ValueError("measure_dsb_skip on a non-folded exec "
+                                 "runs apply() — pass the BN state")
+            apply(tree, state, x, cfg, sparse=shadow)
+        return {
+            "dsb_skip_frac": totals["skipped"] / max(totals["live"], 1),
+            "dsb_skipped_steps": totals["skipped"],
+            "dsb_live_steps": totals["live"],
+            "dsb_per_layer": per_layer,
+        }
+
     def report(self, cfg: ResNetConfig, batch: int = 1, *,
-               dtype_bytes: int = 4, per_layer: bool = False) -> dict:
+               dtype_bytes: int = 4, per_layer: bool = False,
+               dsb_sample: Optional[jnp.ndarray] = None,
+               dsb_tree: PyTree = None,
+               dsb_state: PyTree = None) -> dict:
         """Every accounting field in one dict — the single artifact the
         simulator (``accel.simulator``), the benches and the serving driver
         (``launch.serve_cnn``) consume instead of each re-assembling the
@@ -504,7 +580,13 @@ class SparseConvExec:
         describe the exec's *own* policy (own contract, own ``bm``, own
         operand/output widths). ``per_layer=True`` adds the same fields
         per conv layer (keys ``"/".join(path)``), which is what the
-        simulator reports next to the cycle model."""
+        simulator reports next to the cycle model.
+
+        ``dsb_sample`` (with ``dsb_tree``, the tree this exec was bound
+        from, and ``dsb_state`` for non-folded execs) additionally runs
+        :meth:`measure_dsb_skip` on that input and merges its
+        ``dsb_skip_frac`` / ``dsb_skipped_steps`` / ``dsb_live_steps``
+        fields — the measured dual-sided skip accounting."""
         executed, dense = self.step_counts(cfg, batch=batch)
         live, total = self.schedule_step_counts()
         hbm = lambda imp, bm, ob, out=None: self.hbm_bytes(
@@ -516,6 +598,7 @@ class SparseConvExec:
             "quantized": self.quantized,
             "folded": self.folded,
             "streamed": self.streamed,
+            "activation_dsb": self.activation_dsb,
             "implicit": self.implicit,
             "bm": self.bm,
             "executed_grid_steps": executed,
@@ -539,6 +622,9 @@ class SparseConvExec:
                                   / max(rep["hbm_bytes_materialized"], 1))
         if per_layer:
             rep["per_layer"] = self._per_layer_report(cfg, batch, dtype_bytes)
+        if dsb_sample is not None:
+            rep.update(self.measure_dsb_skip(dsb_tree, dsb_sample, cfg,
+                                             state=dsb_state))
         return rep
 
     def _per_layer_report(self, cfg: ResNetConfig, batch: int,
@@ -749,7 +835,8 @@ def bind_execution(
             return make_sparse_conv(layout, gm, bm=spec.bm, weight=w,
                                     bias=bias, relu=relu,
                                     implicit=spec.implicit, quant=quant,
-                                    out_quant=out_q)
+                                    out_quant=out_q,
+                                    activation_dsb=spec.activation_dsb)
     else:
         if quant_spec is not None and not spec.quantized:
             raise PermanentBindError(
@@ -775,7 +862,8 @@ def bind_execution(
                                         trainable=True)
             return make_sparse_conv(layout, gm, bm=spec.bm,
                                     weight=leaf if spec.quantized else w,
-                                    implicit=spec.implicit, quant=qspec)
+                                    implicit=spec.implicit, quant=qspec,
+                                    activation_dsb=spec.activation_dsb)
 
     table, plans, layouts, gms, bound = _bind_conv_layers(
         tree, specs, group_masks, spec.n_cu, spec.packed, weight_of,
@@ -783,7 +871,9 @@ def bind_execution(
     return SparseConvExec(table=table, plans=plans, n_cu=spec.n_cu,
                           layouts=layouts, group_masks_np=gms,
                           quantized=spec.quantized, folded=spec.folded,
-                          streamed=spec.streamed, trainable=spec.trainable,
+                          streamed=spec.streamed,
+                          activation_dsb=spec.activation_dsb,
+                          trainable=spec.trainable,
                           bound_weights=None if spec.trainable else bound,
                           implicit=_resolve_exec_implicit(spec.implicit,
                                                           layouts),

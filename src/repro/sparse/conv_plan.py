@@ -412,8 +412,7 @@ def conv_m_blocks(ho: int, wo: int, batch: int, *, bm="auto",
     if implicit:
         mb = choose_m_block(ho, wo, cap=cap)
         if mb is not None:
-            block_oh, bm_eff, bpi = mb
-            return batch * bpi, bm_eff
+            return batch * mb.bpi, mb.bm
     bm_eff = adaptive_bm(batch * ho * wo, cap) if bm == "auto" else cap
     return -(-batch * ho * wo // bm_eff), bm_eff
 
@@ -432,9 +431,11 @@ def conv_hbm_bytes(layout: ConvGemmLayout, group_mask, batch: int, h: int,
     ``(M̂, n_packed)`` output. (A lower bound — XLA's im2col/pack
     intermediates add more unless fully fused.)
 
-    Implicit: stream one ``(Hp, Wp, cpk)`` activation slab + one weight
-    tile per live grid step and write the output — the patch matrix
-    never exists.
+    Implicit: stream one ``(rows, cols, cpk)`` activation *window* slab
+    (the double-buffered DMA granule — just the input pixels the
+    M-block reads, not the whole padded image) + one weight tile per
+    live grid step and write the output — the patch matrix never
+    exists.
 
     ``operand_bytes`` prices the *operand* traffic (activations /
     patches / weights) separately from the f32 output write
@@ -451,7 +452,7 @@ def conv_hbm_bytes(layout: ConvGemmLayout, group_mask, batch: int, h: int,
     contract still paid for).
     """
     from ..kernels.conv_lowering import conv_out_size
-    from ..kernels.implicit_conv import choose_m_block, same_pads
+    from ..kernels.implicit_conv import choose_m_block, window_shape
 
     ob = dtype_bytes if operand_bytes is None else operand_bytes
     ob_out = dtype_bytes if out_bytes is None else out_bytes
@@ -466,14 +467,11 @@ def conv_hbm_bytes(layout: ConvGemmLayout, group_mask, batch: int, h: int,
     steps = mb * live
     w_bytes = steps * bk * bn * ob
     out_write = mb * bm_eff * layout.n_packed * ob_out
-    if implicit and geo is not None and choose_m_block(
-            ho, wo, cap=128 if bm == "auto" else int(bm)) is not None:
-        if padding == "SAME":
-            (pt, pb), (pw0, pw1) = same_pads(h, kx, stride), same_pads(w, ky, stride)
-        else:
-            pt = pb = pw0 = pw1 = 0
-        hp, wp = h + pt + pb, w + pw0 + pw1
-        slab = hp * wp * geo["cpk"] * ob
+    mbk = (choose_m_block(ho, wo, cap=128 if bm == "auto" else int(bm))
+           if implicit and geo is not None else None)
+    if mbk is not None:
+        rows, cols = window_shape(mbk, kx, ky, stride)
+        slab = rows * cols * geo["cpk"] * ob
         return steps * slab + w_bytes + out_write
     x_bytes = batch * h * w * cin * ob
     patches = mb * bm_eff * layout.k_packed * ob               # write once
@@ -488,6 +486,7 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
                      implicit: Optional[bool] = None,
                      quant=None,
                      out_quant=None,
+                     activation_dsb: bool = False,
                      trainable: bool = False):
     """Bind a Pallas block-sparse kernel to one conv layer's plan.
 
@@ -543,6 +542,17 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
     returns int8 codes; dequantize at the chain boundary with
     ``code / out_quant.act_scale``.
 
+    ``activation_dsb`` (requires ``quant``): dual-sided sparsity — the
+    implicit kernel reduces each DMA'd activation window to an
+    any-nonzero flag and skips the gather+MXU pass when the int8 code
+    block is all-zero (post-ReLU zeros are exact codes, so the skip is
+    bit-exact at every density). Best-effort: calls that fall back to
+    the materializing path run without the skip, identically exact.
+    ``conv.skip_counts(x, ...)`` runs the same bound kernel with the
+    skip counter enabled and returns ``(y, stats)`` where ``stats`` is
+    ``{"skipped_steps", "live_steps"}`` (``None`` on the materializing
+    fallback) — the measured ``dsb_skip_frac`` source.
+
     ``trainable=True`` makes the closure differentiable in **both**
     arguments via a ``jax.custom_vjp``: ``conv(x, w, ...)`` re-packs the
     (possibly traced) ``w`` per call — so grads reach the caller's params —
@@ -577,6 +587,11 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
         raise ValueError(
             "out_quant requantizes the int8 epilogue — it requires quant "
             "(int8-code operands) as well")
+    if activation_dsb and quant is None:
+        raise ValueError(
+            "activation_dsb skips on exact int8 zero codes — it requires "
+            "quant (int8-code operands); f32 zeros are a tolerance "
+            "question the kernel refuses to answer")
     gm = np.asarray(group_mask)
     tm = layout.tile_mask(gm)
     plan = plan_from_tile_mask(tm, layout.block)
@@ -586,6 +601,10 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
             f"implicit=True needs a channel-major K layout; "
             f"{type(layout).__name__} has none — use implicit=False")
     use_implicit = (geo is not None) if implicit is None else bool(implicit)
+    if activation_dsb and not use_implicit:
+        raise ValueError(
+            "activation_dsb lives in the implicit kernel's window gather "
+            "— bind with implicit=True (needs a channel-major layout)")
     adaptive = bm == "auto"
     bm_cap = 128 if adaptive else int(bm)
     packed_bias = (None if bias is None
@@ -629,38 +648,49 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
     else:
         w_packed, bound_hw = None, None
 
-    def _run(x, wp, kx, ky, stride, padding):
+    def _run(x, wp, kx, ky, stride, padding, count_skips=False):
         """Forward with an already-packed weight ``wp`` (concrete or
         traced): the bound plan's implicit kernel when it fits, else the
-        materializing path."""
+        materializing path. With ``count_skips`` returns ``(y, stats)``
+        — the kernel-side skip counter summed into
+        ``{"skipped_steps", "live_steps"}``, ``None`` off the implicit
+        path."""
         B, H, W, C = x.shape
         ho = conv_out_size(H, kx, stride, padding)
         wo = conv_out_size(W, ky, stride, padding)
         if use_implicit:
-            mb = IC.choose_m_block(ho, wo, cap=bm_cap)
-            if mb is not None:
-                block_oh, bm_eff, bpi = mb
+            mbk = IC.choose_m_block(ho, wo, cap=bm_cap)
+            if mbk is not None:
                 cpk, slot = geo["cpk"], geo["slot"]
-                nKb = layout.tiles[0]
-                xp = IC.pad_input(x, kx, ky, stride, padding, block_oh, bpi,
-                                  nKb * cpk)
-                slab = xp.shape[1] * xp.shape[2] * cpk * x.dtype.itemsize
+                rows, cols = IC.window_shape(mbk, kx, ky, stride)
+                # both double-buffer slots of the window slab
+                slab = 2 * rows * cols * cpk * x.dtype.itemsize
                 if slab <= IC.SLAB_VMEM_BUDGET:
-                    out2d = IC.implicit_block_sparse_conv(
+                    nKb = layout.tiles[0]
+                    xp = IC.pad_input(x, kx, ky, stride, padding, mbk,
+                                      nKb * cpk)
+                    res = IC.implicit_block_sparse_conv(
                         xp, wp, idx_dev, cnt_dev, packed_bias, packed_scale,
                         packed_out_scale,
-                        kx=kx, ky=ky, stride=stride, block_oh=block_oh,
-                        bpi=bpi, wo=wo, block=layout.block, bm=bm_eff,
-                        cpk=cpk, slot=slot, relu=relu,
+                        kx=kx, ky=ky, stride=stride, mb=mbk,
+                        block=layout.block, cpk=cpk, slot=slot, relu=relu,
+                        activation_dsb=activation_dsb,
+                        count_skips=count_skips,
                         interpret=ops._interpret())
-                    o = out2d.reshape(B, bpi, bm_eff, -1)[:, :, :block_oh * wo]
-                    o = o.reshape(B, bpi * block_oh, wo, -1)[:, :ho]
-                    return layout.unpack_output(
+                    out2d, skips = res if count_skips else (res, None)
+                    o = IC.crop_output(out2d, mbk, B, ho, wo)
+                    y = layout.unpack_output(
                         o.reshape(B * ho * wo, -1), (B, ho, wo))
+                    if count_skips:
+                        live = B * mbk.bpi * int(plan.cnt.sum())
+                        return y, {"skipped_steps": int(skips.sum()),
+                                   "live_steps": live}
+                    return y
         patches = im2col_patches(x, kx, ky, stride, padding)
         bm_eff = adaptive_bm(B * ho * wo, bm_cap) if adaptive else bm_cap
         out2d = _materializing(bm_eff)(layout.pack_patches(patches), wp)
-        return layout.unpack_output(out2d, (B, ho, wo))
+        y = layout.unpack_output(out2d, (B, ho, wo))
+        return (y, None) if count_skips else y
 
     # -- trainable path: a custom_vjp per conv geometry --------------------
     # The primal dispatches the same bound plan as inference (implicit
@@ -741,6 +771,21 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
         return _run(x, _pack_w(w), int(w.shape[0]), int(w.shape[1]), stride,
                     padding)
 
+    def skip_counts(x, stride: int = 1, padding: str = "SAME"):
+        """Run the bound conv with the kernel-side skip counter on:
+        ``(y, {"skipped_steps", "live_steps"})`` — ``y`` identical to
+        ``conv(x, ...)`` (the counter is a second output, not a
+        different kernel), stats ``None`` when the call fell back to the
+        materializing path. Counts actual skips, so a bind without
+        ``activation_dsb`` reports 0."""
+        if w_packed is None:
+            raise ValueError("no weight bound at build time — "
+                             "skip_counts needs a prebound conv")
+        if quant is not None and x.dtype != jnp.int8:
+            x = quant.act_codes(x)
+        return _run(x, w_packed, *bound_hw, stride, padding,
+                    count_skips=True)
+
     conv.plan = plan
     conv.layout = layout
     conv.group_mask = gm
@@ -749,5 +794,7 @@ def make_sparse_conv(layout: ConvGemmLayout, group_mask, *, bm="auto",
     conv.bm = bm
     conv.quant = quant
     conv.out_quant = out_quant
+    conv.activation_dsb = activation_dsb
     conv.trainable = trainable
+    conv.skip_counts = skip_counts
     return conv

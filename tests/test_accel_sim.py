@@ -110,3 +110,45 @@ def test_layer_dims_count():
     dims = cnn.layer_dims(cfg, params)
     assert len(dims) == 21                     # the paper's 21 conv layers
     assert 0.03e9 < cnn.network_ops(cfg, params) < 0.1e9
+
+
+def test_simulator_dual_sided_dsb_fields():
+    """With sample images the simulator prices dual-sided DSB cycles next
+    to the weight-only figure, and measure_dsb=True wires the kernel's
+    measured skip fraction next to the column-granularity prediction."""
+    cfg, params, state = _tiny_cnn()
+    accel = dataclasses.replace(BOARDS["zedboard_100mhz_72dsp"], n_cu=4)
+
+    specs = cnn.conv_group_specs(params, accel.n_cu)
+    hcfg = HAPMConfig(0.5, 1)
+    st = hapm_init(specs, hcfg)
+    st = hapm_epoch_update(st, specs, params, hcfg)
+    pruned = apply_masks(params, hapm_element_masks(specs, st))
+
+    # no images: dual-sided fields stay unset
+    dry = simulate(pruned, state, cfg, accel)
+    assert dry.cycles_dual is None and dry.dual_dsb_cycle_ratio is None
+    assert dry.dsb_skip_frac_measured is None
+
+    # ReLU-sparse-ish frames: half the image dead -> zero codes
+    imgs = np.array(jax.random.uniform(jax.random.PRNGKey(1), (4, 16, 16, 3)))
+    imgs[:, 8:] = 0.0
+    rep = simulate(pruned, state, cfg, accel, jnp.asarray(imgs),
+                   measure_dsb=True, dsb_sample=2)
+    assert rep.cycles_dual is not None
+    # dual-sided can only remove more cycles than weight-only
+    assert rep.dual_dsb_cycle_ratio <= rep.dsb_cycle_ratio + 1e-9
+    assert 0.0 < rep.dsb_skip_frac_predicted < 1.0
+    assert 0.0 <= rep.dsb_skip_frac_measured <= rep.dsb_skip_frac_predicted
+    # per-layer table carries prediction and (for bound layers) measurement
+    assert any("measured_skip" in d for d in rep.dsb_skip_per_layer.values())
+    assert all(0.0 <= d["predicted_skip"] <= 1.0
+               for d in rep.dsb_skip_per_layer.values()
+               if "predicted_skip" in d)
+    row = rep.row()
+    assert row["dual_dsb_cycle_ratio"] == rep.dual_dsb_cycle_ratio
+    assert row["dsb_skip_frac_measured"] == rep.dsb_skip_frac_measured
+
+    # measure_dsb without images is a usage error
+    with pytest.raises(ValueError, match="images"):
+        simulate(pruned, state, cfg, accel, measure_dsb=True)

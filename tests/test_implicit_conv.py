@@ -154,30 +154,34 @@ def test_choose_m_block_invariants():
     cap, maximal, and the blocks tile the output height."""
     for ho, wo in [(1, 1), (4, 4), (8, 8), (16, 16), (9, 7), (17, 3),
                    (32, 32), (5, 128), (3, 40)]:
-        block_oh, bm, bpi = IC.choose_m_block(ho, wo)
-        assert bm == -(-block_oh * wo // 8) * 8 and bm <= 128
-        assert bpi * block_oh >= ho > (bpi - 1) * block_oh
-        if block_oh < ho:          # maximality: one more row would overflow
-            assert -(-(block_oh + 1) * wo // 8) * 8 > 128
+        mb = IC.choose_m_block(ho, wo)
+        assert mb.spi == 1 and mb.block_ow == wo
+        assert mb.bm == -(-mb.block_oh * wo // 8) * 8 and mb.bm <= 128
+        assert mb.bpi * mb.block_oh >= ho > (mb.bpi - 1) * mb.block_oh
+        if mb.block_oh < ho:       # maximality: one more row would overflow
+            assert -(-(mb.block_oh + 1) * wo // 8) * 8 > 128
     # batch-1 tails stop padding to 128
-    assert IC.choose_m_block(4, 4)[1] == 16
-    assert IC.choose_m_block(8, 8)[1] == 64
-    # wider than the cap: no whole-row block fits
-    assert IC.choose_m_block(4, 129) is None
+    assert IC.choose_m_block(4, 4).bm == 16
+    assert IC.choose_m_block(8, 8).bm == 64
+    # wider than the cap: rows split into 8-aligned column segments
+    assert IC.choose_m_block(4, 129) == IC.MBlock(1, 128, 2, 128, 8)
+    wide = IC.choose_m_block(64, 256)
+    assert wide == IC.MBlock(1, 128, 2, 128, 128)
+    assert wide.spi * wide.block_ow >= 256
     assert adaptive_bm(16) == 16 and adaptive_bm(3) == 8
     assert adaptive_bm(10_000) == 128
     # accounting helper agrees with the kernel's blocking
     mb, bm = conv_m_blocks(8, 8, batch=3, bm="auto", implicit=True)
-    assert (mb, bm) == (3 * IC.choose_m_block(8, 8)[2],
-                        IC.choose_m_block(8, 8)[1])
+    assert (mb, bm) == (3 * IC.choose_m_block(8, 8).bpi,
+                        IC.choose_m_block(8, 8).bm)
     mb, bm = conv_m_blocks(8, 8, batch=3, bm="auto", implicit=False)
     assert (mb, bm) == (-(-3 * 64 // 128), 128)
 
 
 def test_implicit_falls_back_to_materializing(monkeypatch):
-    """Wide images (no whole-row M-block under the cap) and over-budget
-    activation slabs fall back to the materializing path — same closure,
-    same result."""
+    """Over-budget window slabs fall back to the materializing path —
+    same closure, same result — while 130-wide rows now *stay* implicit
+    via column segmentation."""
     rng = np.random.RandomState(5)
     spec = fpga_conv_groups((1, 1, 4, 8), 4)
     gm = _group_mask(rng, spec.num_groups, 0.5)
@@ -185,19 +189,45 @@ def test_implicit_falls_back_to_materializing(monkeypatch):
     wm = w * spec.expand(jnp.asarray(gm))
     conv = make_sparse_conv(conv_gemm_layout(spec, packed=True), gm, weight=w,
                             implicit=True)
-    # 130-wide rows: choose_m_block -> None -> materializing path
+    # 130-wide rows: segmented M-blocks keep the implicit path
     x = jnp.asarray(rng.randn(1, 2, 130, 4).astype(np.float32))
     out = conv(x, stride=1, padding="SAME")
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(CL.conv_via_matmul(x, wm)),
         rtol=1e-5, atol=1e-5)
-    # slab over the VMEM budget: same fallback, still exact
+    # slab over the VMEM budget: materializing fallback, still exact
     x2 = jnp.asarray(rng.randn(1, 6, 5, 4).astype(np.float32))
     expect = CL.conv_via_matmul(x2, wm)
     monkeypatch.setattr(IC, "SLAB_VMEM_BUDGET", 16)
     out2 = conv(x2, stride=1, padding="SAME")
     np.testing.assert_allclose(np.asarray(out2), np.asarray(expect),
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "VALID")])
+def test_wide_input_keeps_implicit_path(stride, padding):
+    """ROADMAP coverage gap (b): a 1×64×256×8 input — one output row is
+    wider than the 128-column cap — runs the implicit kernel on column
+    segments and matches the materializing oracle."""
+    rng = np.random.RandomState(11)
+    spec = fpga_conv_groups((3, 3, 8, 8), 4)
+    gm = _group_mask(rng, spec.num_groups, 0.5)
+    w = jnp.asarray(rng.randn(3, 3, 8, 8).astype(np.float32))
+    wm = w * spec.expand(jnp.asarray(gm))
+    x = jnp.asarray(rng.randn(1, 64, 256, 8).astype(np.float32))
+    layout = conv_gemm_layout(spec, packed=True)
+    ho = CL.conv_out_size(64, 3, stride, padding)
+    wo = CL.conv_out_size(256, 3, stride, padding)
+    mb = IC.choose_m_block(ho, wo)
+    if -(-wo // 8) * 8 > 128:
+        assert mb is not None and mb.spi > 1    # segmented, not fallback
+    conv = make_sparse_conv(layout, gm, weight=w, implicit=True)
+    out = conv(x, stride=stride, padding=padding)
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(CL.conv_via_matmul(x, wm, stride, padding,
+                                      out_dtype=jnp.float32)),
+        rtol=1e-4, atol=1e-4)
 
 
 def test_conv_via_matmul_out_dtype_keeps_f32_accumulation():

@@ -513,3 +513,78 @@ def test_simulate_trace_backward_compatible_keys():
         assert k in sim
     assert sim["requests"] == 2 and sim["shed"] == 0
     assert "outputs" not in sim             # only with a server attached
+
+
+# ---------------------------------------------------- ladder promotion
+def test_ladder_clears_activation_dsb_with_quantized():
+    full = degradation_ladder(cnn.ExecSpec(quantized=True, folded=True,
+                                           streamed=True, implicit=True,
+                                           activation_dsb=True, n_cu=N_CU))
+    assert [rung_name(r) for r in full] == \
+        ["streamed", "quantized", "f32", "dense"]
+    # the skip survives streamed -> quantized (still exact int8 codes)
+    assert full[0].activation_dsb and full[1].activation_dsb
+    # ...and is cleared together with quantized: f32 has no zero codes,
+    # and ExecSpec validation would reject the combination
+    assert not full[2].activation_dsb
+    for r in full[:-1]:
+        dataclasses.replace(r)    # every rung revalidates cleanly
+
+
+def test_serve_policy_promotion_validation():
+    with pytest.raises(ValueError, match="promote_after_clean"):
+        ServePolicy(promote_after_clean=0)
+    assert ServePolicy(promote_after_clean=3).promote_after_clean == 3
+    assert ServePolicy().promote_after_clean is None      # off by default
+
+
+def test_ladder_promotion_after_clean_requests(tiny):
+    cfg, pruned, state = tiny
+    spec = cnn.ExecSpec(quantized=True, n_cu=N_CU)
+    faults = FaultPlan(bind_fail_calls=(0, 1))   # exhaust 1 retry at rung 0
+    srv = CnnServer(pruned, state, cfg, spec=spec, buckets=(1,),
+                    policy=ServePolicy(max_bind_retries=1, bind_backoff_s=0.0,
+                                       promote_after_clean=2),
+                    faults=faults)
+    x = _x(1)
+    np.asarray(srv.infer(x))
+    assert srv.level == 1                        # degraded to f32
+    assert srv.stats()["clean_streak"] == 0      # degrading request != clean
+    np.asarray(srv.infer(x))
+    assert srv.level == 1 and srv.stats()["clean_streak"] == 1
+    np.asarray(srv.infer(x))                     # 2nd clean -> walk back up
+    assert srv.level == 0
+    assert srv.resilience["promotions"] == 1
+    assert srv.stats()["clean_streak"] == 0
+    assert any("promoted" in s for s in srv.degrade_log)
+    # the re-earned rung serves the requested spec bit-exactly again
+    y = np.asarray(srv.infer(x))
+    assert srv.last_request_level == 0
+    ref = CnnServer(pruned, state, cfg, spec=spec, buckets=(1,))
+    assert bool((np.asarray(ref.infer(x)) == y).all())
+    # at rung 0 there is nothing to promote to — clean requests no-op
+    np.asarray(srv.infer(x))
+    assert srv.level == 0 and srv.resilience["promotions"] == 1
+
+
+def test_promotion_redegrades_on_persistent_fault(tiny):
+    cfg, pruned, state = tiny
+    spec = cnn.ExecSpec(quantized=True, n_cu=N_CU)
+    faults = FaultPlan(nonfinite_calls=(0,))
+    srv = CnnServer(pruned, state, cfg, spec=spec, buckets=(1,),
+                    policy=ServePolicy(promote_after_clean=1), faults=faults)
+    x = _x(1, seed=2)
+    np.asarray(srv.infer(x))     # NaN at rung 0 -> quarantine + degrade
+    assert srv.level == 1
+    np.asarray(srv.infer(x))     # one clean request -> promoted
+    assert srv.level == 0 and srv.resilience["promotions"] == 1
+    # rung 0 is still quarantined: the next request re-degrades and the
+    # streak restarts — oscillation is bounded to once per N requests
+    y = np.asarray(srv.infer(x))
+    assert np.isfinite(y).all()
+    assert srv.level == 1
+    assert srv.resilience["downgrades"] == 2
+    assert srv.stats()["clean_streak"] == 0
+    # update_masks lifts quarantines and resets promotion state with it
+    srv.update_masks(pruned, state)
+    assert srv.level == 0 and srv.stats()["clean_streak"] == 0
